@@ -1,0 +1,102 @@
+"""Fig. 3b-e reproductions: dataflow comparison and input-size/bus-width scaling."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import BusConfig, System, WorkloadModel
+from repro.core.banksim import BankConfig, simulate_stream
+
+from .paper_workloads import (
+    gemv_model, trmv_model, ismt_model, spmv_model, synth_csr, evaluate,
+)
+
+
+def _cfg_for_width(bus_bits: int) -> BusConfig:
+    return BusConfig(bus_bits=bus_bits, lanes=bus_bits // 32)
+
+
+def _banks_for_width(bus_bits: int) -> BankConfig:
+    return BankConfig(n_ports=bus_bits // 32, n_banks=17)
+
+
+def _with_width(model_fn, bus_bits: int, *args, **kwargs) -> WorkloadModel:
+    m = model_fn(*args, **kwargs)
+    m.cfg = _cfg_for_width(bus_bits)
+    banks = _banks_for_width(bus_bits)
+
+    def cf(stream):
+        from repro.core.streams import BurstKind
+        from repro.core import beats_for
+        try:
+            r = simulate_stream(stream, banks)
+        except Exception:
+            return 0.0
+        analytic = r.data_beats
+        if stream.kind is BurstKind.INDIRECT:
+            analytic += beats_for(stream.count, m.cfg.bus_bits, stream.index_bits)
+        return float(max(0, r.cycles - analytic))
+
+    m.conflict_fn = cf
+    return m
+
+
+def fig3b_gemv_dataflows(n: int = 256) -> Dict[str, Dict[str, float]]:
+    """Row vs column dataflow on each system (Fig. 3b)."""
+    out = {}
+    for flow in ("row", "col"):
+        m = gemv_model(n, flow)
+        r = m.evaluate_all()
+        out[flow] = {
+            s: r[s].cycles for s in (System.BASE, System.PACK, System.IDEAL)
+        }
+        out[flow]["util_pack"] = r[System.PACK].bus_util
+        out[flow]["util_base"] = r[System.BASE].bus_util
+    return out
+
+
+def fig3c_trmv_dataflows(n: int = 256) -> Dict[str, Dict[str, float]]:
+    out = {}
+    for flow in ("row", "col"):
+        m = trmv_model(n, flow)
+        r = m.evaluate_all()
+        out[flow] = {
+            s: r[s].cycles for s in (System.BASE, System.PACK, System.IDEAL)
+        }
+        out[flow]["util_pack"] = r[System.PACK].bus_util
+    return out
+
+
+def fig3d_ismt_scaling(
+    sizes=(8, 16, 32, 64, 128, 256), widths=(64, 128, 256)
+) -> List[Dict]:
+    """ismt speedup vs matrix size × bus width (Fig. 3d).
+
+    Expectations from the paper: speedups converge with size (up to
+    1.9/3.2/5.4× for 64/128/256-bit buses) and shrink for small matrices;
+    PACK never loses to BASE (request bundling)."""
+    rows = []
+    for w in widths:
+        for n in sizes:
+            m = _with_width(ismt_model, w, n)
+            base = m.evaluate(System.BASE).cycles
+            pack = m.evaluate(System.PACK).cycles
+            rows.append({"bus_bits": w, "n": n, "speedup": base / pack})
+    return rows
+
+
+def fig3e_spmv_scaling(
+    nnz_list=(2, 8, 32, 128, 390), widths=(64, 128, 256), n_rows: int = 96
+) -> List[Dict]:
+    """spmv speedup vs avg nonzeros/row × bus width (Fig. 3e)."""
+    rows = []
+    for w in widths:
+        for nnz in nnz_list:
+            indptr, indices, _ = synth_csr(n_rows, nnz, n_cols=4096, seed=1)
+            m = _with_width(spmv_model, w, indptr, indices)
+            base = m.evaluate(System.BASE).cycles
+            pack = m.evaluate(System.PACK).cycles
+            rows.append({"bus_bits": w, "avg_nnz": nnz, "speedup": base / pack})
+    return rows

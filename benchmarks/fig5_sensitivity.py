@@ -1,0 +1,64 @@
+"""Fig. 5 reproductions: element/index size and bank-count sensitivity.
+
+Protocol per §III-E: ideal requestor issuing length-256 reads, random
+indices, decoupling queues deepened to 32.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.banksim import (
+    BankConfig,
+    crossbar_area_kge,
+    indirect_utilization,
+    strided_utilization,
+)
+
+BANK_COUNTS = (8, 11, 16, 17, 23, 32, 31)
+
+
+def fig5a_indirect(
+    pairs=((32, 32), (32, 16), (32, 8), (64, 32), (64, 16)),
+    bank_counts=BANK_COUNTS,
+    burst_len: int = 256,
+) -> List[Dict]:
+    rows = []
+    for elem_bits, index_bits in pairs:
+        for banks in bank_counts:
+            cfg = BankConfig(n_ports=8, n_banks=banks, queue_depth=32)
+            u = indirect_utilization(cfg, elem_bits, index_bits, burst_len)
+            r = elem_bits / index_bits
+            rows.append({
+                "elem_bits": elem_bits, "index_bits": index_bits,
+                "banks": banks, "utilization": u,
+                "ceiling_r_over_r1": r / (r + 1),
+            })
+    return rows
+
+
+def fig5b_strided(
+    elem_bits_list=(32, 64), bank_counts=BANK_COUNTS,
+    strides=range(0, 64), burst_len: int = 256,
+) -> List[Dict]:
+    rows = []
+    for elem_bits in elem_bits_list:
+        for banks in bank_counts:
+            cfg = BankConfig(n_ports=8, n_banks=banks, queue_depth=32)
+            us = [strided_utilization(max(s, 1), cfg, elem_bits, burst_len)
+                  for s in strides]
+            rows.append({
+                "elem_bits": elem_bits, "banks": banks,
+                "mean_utilization": float(np.mean(us)),
+                "prime": banks in (11, 17, 23, 31),
+            })
+    return rows
+
+
+def fig5c_crossbar_area(bank_counts=BANK_COUNTS) -> List[Dict]:
+    return [
+        {"banks": b, "area_kge": crossbar_area_kge(8, b),
+         "prime": b in (11, 17, 23, 31)}
+        for b in sorted(bank_counts)
+    ]

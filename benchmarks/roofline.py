@@ -1,0 +1,111 @@
+"""§Roofline: three-term analysis per (arch × shape × mesh) from dry-run
+artifacts.
+
+    compute term    = HLO_FLOPs / (chips × 197 TF/s)        [per-device FLOPs]
+    memory term     = HLO_bytes / (chips × 819 GB/s)
+    collective term = wire_bytes / (chips × 50 GB/s/link)
+
+Sources: per-device loop-aware dot FLOPs and collective wire bytes parsed
+from the compiled HLO (launch.hlo_analysis); the memory term uses an
+analytic traffic model (params + grads + optimizer state + remat-recomputed
+activations; cost_analysis() 'bytes accessed' is reported alongside but
+undercounts scan bodies).  MODEL_FLOPS = 6·N_active·D for train, 2·N_active·D
+for a forward (prefill), 2·N_active per token for decode.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs import ALL_ARCH_NAMES, get_config
+from repro.configs.base import SHAPES
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def model_flops_per_device(arch: str, shape_name: str, chips: int) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens / chips
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n * tokens / chips
+    return 2.0 * n * shape.global_batch / chips  # decode: one token/seq
+
+
+def analytic_hbm_bytes(arch: str, shape_name: str, chips: int, rec: Dict) -> float:
+    """Per-device HBM traffic estimate for one step.
+
+    train: params read (fwd+bwd+remat ≈ 3×) + grads written+read + optimizer
+    state r/w + residual stack w/r.  serve: params read once + cache r/w.
+    Uses the dry-run's own per-device argument bytes as the params+state
+    footprint (exact, sharding-aware).
+    """
+    shape = SHAPES[shape_name]
+    arg_bytes = rec["memory"]["argument_bytes"]
+    if shape.kind == "train":
+        # params+opt read + written once (aliased), grads transient ×2,
+        # plus one full remat re-read of params per microbatch backward.
+        return 3.0 * arg_bytes + 2.0 * rec["memory"]["temp_bytes"]
+    # serving: weights + cache read, cache written incrementally
+    return arg_bytes + rec["memory"]["temp_bytes"]
+
+
+def load_cells(mesh: str = "pod16x16") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def roofline_rows(mesh: str = "pod16x16") -> List[Dict]:
+    out = []
+    for rec in load_cells(mesh):
+        arch, shape = rec["arch"], rec["shape"]
+        chips = rec["chips"]
+        hlo_flops = rec.get("loop_aware_dot_flops_per_device", 0.0)
+        wire = rec.get("collective_wire_bytes_per_device", 0.0)
+        hbm = analytic_hbm_bytes(arch, shape, chips, rec)
+        t_c = hlo_flops / PEAK_FLOPS
+        t_m = hbm / HBM_BW
+        t_n = wire / ICI_BW
+        mf = model_flops_per_device(arch, shape, chips)
+        dominant = max(("compute", t_c), ("memory", t_m), ("collective", t_n),
+                       key=lambda kv: kv[1])[0]
+        out.append({
+            "arch": arch, "shape": shape, "mesh": mesh,
+            "compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+            "dominant": dominant,
+            "model_flops_per_dev": mf,
+            "hlo_flops_per_dev": hlo_flops,
+            "useful_flop_ratio": mf / hlo_flops if hlo_flops else float("nan"),
+            "mem_gb_per_dev": rec["memory"]["peak_per_device_gb"],
+            "roofline_fraction": (
+                mf / PEAK_FLOPS / max(t_c, t_m, t_n)
+                if max(t_c, t_m, t_n) > 0 else float("nan")
+            ),
+        })
+    return out
+
+
+def print_table(rows: List[Dict]) -> None:
+    hdr = (f"{'arch':16s} {'shape':12s} {'comp(s)':>9s} {'mem(s)':>9s} "
+           f"{'coll(s)':>9s} {'dominant':>10s} {'useful':>7s} {'roofline':>9s} {'GB/dev':>7s}")
+    print(hdr)
+    for r in rows:
+        print(f"{r['arch']:16s} {r['shape']:12s} {r['compute_s']:9.4f} "
+              f"{r['memory_s']:9.4f} {r['collective_s']:9.4f} "
+              f"{r['dominant']:>10s} {r['useful_flop_ratio']:7.2f} "
+              f"{r['roofline_fraction']:9.3f} {r['mem_gb_per_dev']:7.2f}")

@@ -1,0 +1,56 @@
+"""Quickstart: packed irregular streams end-to-end in 60 lines.
+
+1. the core API (strided/indirect gather-scatter, the AXI-Pack converters),
+2. the bus-packing law they implement,
+3. a tiny LM using them (embedding gather + MoE dispatch) for a few steps.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BusConfig, StridedStream, System, stream_cycles
+from repro.kernels import ops
+from repro.configs import smoke_config
+from repro.models import lm
+from repro.optim import OptimizerConfig, make_optimizer
+from repro.parallel.sharding import make_rules
+from repro.train import make_train_step
+
+# --- 1. packed streams ------------------------------------------------------
+rng = np.random.default_rng(0)
+table = jnp.asarray(rng.normal(size=(1024, 256)), jnp.float32)
+
+# strided read: rows 3, 7, 11, ... packed into a dense block (stride burst)
+packed = ops.strided_gather(table, base=3, stride=4, count=8)
+print("strided_gather:", packed.shape)
+
+# indirect read: memory-resident indices drive the DMA (vlimxei semantics)
+idx = jnp.asarray(rng.integers(0, 1024, 16), jnp.int32)
+gathered = ops.indirect_gather(table, idx)
+print("indirect_gather:", gathered.shape)
+
+# --- 2. why packing matters: the bus model ----------------------------------
+cfg = BusConfig()  # 256-bit bus, fp32 elements
+s = StridedStream(base=0, elem_bits=32, count=4096, stride=7)
+base = stream_cycles(s, System.BASE, cfg).cycles
+pack = stream_cycles(s, System.PACK, cfg).cycles
+print(f"stride-7 stream of 4096 fp32: BASE {base:.0f} cyc → PACK {pack:.0f} cyc "
+      f"({base/pack:.1f}x, paper's peak is 5.4x system-level)")
+
+# --- 3. a tiny MoE LM whose embedding + dispatch are packed streams ----------
+arch = smoke_config("olmoe-1b-7b")
+rules = make_rules(with_pod=False, batch_axes=None)
+params = lm.init_model(arch, jax.random.PRNGKey(0))
+opt = make_optimizer(OptimizerConfig(lr=1e-2, warmup_steps=5, total_steps=50))
+state = opt.init(params)
+step = jax.jit(make_train_step(arch, opt, rules))
+
+toks = jnp.asarray(rng.integers(0, arch.vocab, (4, 33)))
+batch = {"tokens": toks[:, :-1], "targets": toks[:, 1:],
+         "mask": jnp.ones((4, 32))}
+for i in range(10):
+    params, state, metrics = step(params, state, batch, i)
+print(f"10 steps on the smoke MoE: loss {float(metrics['loss']):.3f} "
+      f"(memorizing one batch, should fall below ln(V)={np.log(arch.vocab):.2f})")

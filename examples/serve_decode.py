@@ -1,0 +1,65 @@
+"""Serving example: batched generation + the paged-KV indirect stream kernel.
+
+Part 1 serves a small dense model through the engine (prefill + greedy
+decode with the sequence-sharded contiguous cache — what the dry-run's
+decode cells lower).
+
+Part 2 demonstrates the paged cache directly: scattered physical pages, a
+page table as the AXI-Pack indirect stream descriptor, and the Pallas
+``paged_decode_attention`` kernel consuming it (validated vs the oracle),
+including the int8-packed variant (narrower elements → half the HBM
+traffic, the paper's §III-E element-size argument).
+
+Run: PYTHONPATH=src python examples/serve_decode.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.kernels import ops, ref
+from repro.models import lm
+from repro.parallel.sharding import make_rules
+from repro.serve import PagedKVCache, ServeEngine
+
+rng = np.random.default_rng(0)
+
+# --- Part 1: engine ----------------------------------------------------------
+cfg = smoke_config("yi-6b")
+rules = make_rules(with_pod=False, batch_axes=None)
+params = lm.init_model(cfg, jax.random.PRNGKey(0))
+engine = ServeEngine(cfg, params, rules, max_len=64, batch=4)
+prompts = jnp.asarray(rng.integers(0, cfg.vocab, (4, 12)), jnp.int32)
+out = engine.generate(prompts, n_new=16)
+print("engine generated:", out.shape, "first row:", out[0][:8].tolist())
+
+# --- Part 2: paged KV + indirect-stream kernel -------------------------------
+B, H, KVH, D, page, npages = 4, 8, 2, 32, 16, 4
+pool = 32
+cache = PagedKVCache.create(smoke_config("yi-6b"), batch=B, max_len=page * npages,
+                            page=page)
+print(f"paged pool: {pool} pages × {page} tokens (free: {len(cache.free)})")
+
+kp = jnp.asarray(rng.normal(size=(pool, page, KVH, D)), jnp.float32)
+vp = jnp.asarray(rng.normal(size=(pool, page, KVH, D)), jnp.float32)
+table = jnp.asarray(rng.permutation(pool)[: B * npages].reshape(B, npages),
+                    jnp.int32)
+lengths = jnp.asarray(rng.integers(1, page * npages, B), jnp.int32)
+q = jnp.asarray(rng.normal(size=(B, H, D)), jnp.float32)
+
+o_kernel = ops.paged_decode_attention(q, kp, vp, table, lengths)        # Pallas
+o_oracle = ops.paged_decode_attention(q, kp, vp, table, lengths, impl="ref")
+err = float(jnp.abs(o_kernel - o_oracle).max())
+print(f"paged_decode kernel vs oracle: max err {err:.2e}")
+
+# int8-packed pages: half the bytes per KV element on the stream
+kq, ks = ref.int8_quantize(kp, axis=-1)
+vq, vs = ref.int8_quantize(vp, axis=-1)
+o_int8 = ops.paged_decode_attention(q, kq, vq, table, lengths,
+                                    k_scale=ks[..., 0], v_scale=vs[..., 0])
+q_err = float(jnp.abs(o_int8 - o_oracle).max())
+bytes_bf16 = kp.size * 2 * 2
+bytes_int8 = kp.size * 2 * 1 + ks.size * 4 * 2
+print(f"int8-packed cache: err {q_err:.3f}, stream bytes "
+      f"{bytes_bf16/2**20:.1f} MiB → {bytes_int8/2**20:.1f} MiB "
+      f"({bytes_bf16/bytes_int8:.2f}x reduction)")

@@ -1,0 +1,2 @@
+"""repro: AXI-Pack-inspired packed-irregular-stream framework in JAX."""
+__version__ = "0.1.0"

@@ -1,0 +1,2 @@
+"""Atomic, async, retention-managed checkpointing."""
+from .manager import CheckpointManager

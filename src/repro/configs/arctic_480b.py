@@ -1,0 +1,31 @@
+"""arctic-480b — 128-expert top-2 MoE + dense residual MLP. [hf:Snowflake/*].
+
+35L d_model=7168 56H (GQA kv=8) d_ff=4864/expert vocab=32000.  Dense residual
+path runs in parallel with the MoE FFN.  TP-16 pads q heads 56->64; kv=8
+replicated (decode cache is sequence-sharded).  Adafactor + FSDP: AdamW fp32
+states for 480B (~5.8 TB) exceed a 256-chip pod; factored second moment +
+(data x model)-sharded states fit (see EXPERIMENTS.md dry-run bytes).
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="arctic-480b",
+    family="moe",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=4864,
+    vocab=32000,
+    n_experts=128,
+    top_k=2,
+    dense_residual=True,
+    tp_pad_heads=64,
+    tp_pad_kv_heads=16,
+    shard_kv_heads=True,
+    fsdp=True,
+    optimizer="adafactor",
+    param_dtype="bfloat16",
+    prefill_chunk=4096,    # chunked prefill: bounds MoE dispatch buffers  # f32 params for 480B exceed pod HBM even sharded
+    notes="full attention: long_500k skipped",
+)

@@ -1,0 +1,29 @@
+"""gemma3-27b — 5:1 local:global sliding-window stack, 128k-class context.
+
+[hf:google/gemma-3-*-pt; unverified tier].  62L d_model=5376 32H (GQA kv=16)
+head_dim=128 d_ff=21504 vocab=262144.  Every 6th layer is global (traced
+flag inside the layer scan); locals use a 1024-token window with RoPE theta
+10k, globals theta 1M.  long_500k RUNS: windowed locals keep sub-quadratic
+aggregate cost; global-layer KV (~10 layers) shards over the cache_seq axis.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma3-27b",
+    family="dense",
+    n_layers=62,
+    d_model=5376,
+    n_heads=32,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=21504,
+    vocab=262144,
+    activation="gelu",
+    rope_theta=1e6,
+    tie_embeddings=True,
+    window=1024,
+    global_interval=6,
+    shard_kv_heads=True,
+    fsdp=True,
+    notes="long_500k runs (sliding-window locals + sparse globals)",
+)

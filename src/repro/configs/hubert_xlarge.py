@@ -1,0 +1,28 @@
+"""hubert-xlarge — encoder-only audio transformer. [arXiv:2106.07447].
+
+48L d_model=1280 16H (kv=16) d_ff=5120 vocab=504 (cluster targets).
+Bidirectional (causal=False), plain GELU FFN (no GLU).  The conv waveform
+frontend is a stub: ``input_specs`` provides frame embeddings (B, S, 512).
+Encoder-only => decode_32k and long_500k are SKIPPED (no autoregressive
+step).  Framework note: RMSNorm is used in place of LayerNorm (uniform
+substrate; recorded in DESIGN.md).
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="hubert-xlarge",
+    family="audio",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=5120,
+    vocab=504,
+    causal=False,
+    glu=False,
+    activation="gelu",
+    modality="audio",
+    frontend_dim=512,
+    shard_kv_heads=True,
+    notes="encoder-only: decode shapes skipped",
+)

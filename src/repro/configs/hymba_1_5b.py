@@ -1,0 +1,27 @@
+"""hymba-1.5b — parallel attention + Mamba heads per block. [arXiv:2411.13676].
+
+32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001 ssm_state=16.
+Each block runs sliding-window attention (1024) in parallel with a selective
+SSM head, per-path output-normed and averaged; layers {0, L/2, L-1} use
+global attention.  Meta-tokens are out of scope (DESIGN.md).  TP-16 pads
+q heads 25->32, kv 5->8 (replicated).  long_500k RUNS (hybrid).
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    d_ff=5504,
+    vocab=32001,
+    ssm="hymba",
+    ssm_state=16,
+    window=1024,
+    tp_pad_heads=32,
+    tp_pad_kv_heads=16,
+    shard_kv_heads=True,
+    notes="hybrid: long_500k runs; 3 global-attention layers",
+)

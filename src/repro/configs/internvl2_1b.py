@@ -1,0 +1,29 @@
+"""internvl2-1b — InternViT patch frontend (stub) + Qwen2-0.5B-class LM backbone.
+
+[arXiv:2404.16821; hf].  24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151655.
+The ViT frontend is a stub per the assignment: ``input_specs`` supplies
+precomputed patch embeddings (B, 256, 1024) projected into the LM.
+TP-16 pads q heads 14->16; kv=2 replicated (2 < 16; KV tensors are tiny).
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internvl2-1b",
+    family="vlm",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    n_kv_heads=2,
+    d_ff=4864,
+    vocab=151655,
+    qkv_bias=True,           # Qwen2 LM backbone uses QKV bias
+    rope_theta=1e6,
+    tie_embeddings=True,
+    modality="vlm",
+    frontend_dim=1024,       # InternViT-300M hidden size
+    frontend_len=256,        # patch tokens per image
+    tp_pad_heads=16,
+    tp_pad_kv_heads=16,
+    shard_kv_heads=True,
+    notes="full attention: long_500k skipped (no sub-quadratic path)",
+)

@@ -1,0 +1,29 @@
+"""qwen1.5-32b — dense GQA(kv=40 = MHA) with QKV bias. [hf:Qwen/Qwen1.5-*].
+
+64L d_model=5120 40H kv=40 d_ff=27392 vocab=152064.  TP-16 pads heads
+40->48 (q and kv).  Decode uses an int8 KV cache: bf16 would need ~21.5
+GB/chip at decode_32k (64L x 40kv x 128hd x 32k x b128 / 256 chips); int8
+packing (the paper's narrow-element argument) halves it under the 16 GB HBM.
+FSDP on: 32B params' optimizer state shards over data x model.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen1.5-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=40,
+    d_ff=27392,
+    vocab=152064,
+    qkv_bias=True,
+    rope_theta=1e6,
+    tp_pad_heads=48,
+    tp_pad_kv_heads=48,
+    shard_kv_heads=True,
+    cache_dtype="int8",
+    serve_mlp_int8=True,   # w8a16: MLP fits model-sharded, no per-token gathers
+    fsdp=True,
+    notes="full attention: long_500k skipped",
+)

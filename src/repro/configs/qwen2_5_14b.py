@@ -1,0 +1,25 @@
+"""qwen2.5-14b — dense GQA with QKV bias. [hf:Qwen/Qwen2.5-*].
+
+48L d_model=5120 40H (GQA kv=8) d_ff=13824 vocab=152064.  TP-16 pads q heads
+40->48; kv=8 replicated.  FSDP on (AdamW states for 14B exceed 16 GB/chip
+under model-only sharding).
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2.5-14b",
+    family="dense",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=13824,
+    vocab=152064,
+    qkv_bias=True,
+    rope_theta=1e6,
+    tp_pad_heads=48,
+    tp_pad_kv_heads=16,
+    shard_kv_heads=True,
+    fsdp=True,
+    notes="full attention: long_500k skipped",
+)

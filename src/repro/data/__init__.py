@@ -1,0 +1,2 @@
+"""Data pipeline: memmap token shards, deterministic per-host batching."""
+from .pipeline import TokenDataset, make_frontend_batch, synthetic_corpus, write_corpus

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the packed-stream hot spots.
+
+Layout per kernel: ``<name>.py`` holds the ``pl.pallas_call`` + BlockSpec
+tiling; :mod:`repro.kernels.ops` the jit'd public wrappers with impl
+dispatch; :mod:`repro.kernels.ref` the pure-jnp oracles.
+"""
+from . import ops, ref
+from .ops import (
+    flash_attention,
+    indirect_gather,
+    indirect_scatter,
+    moe_combine,
+    moe_dispatch,
+    paged_decode_attention,
+    spmv_ell,
+    strided_gather,
+    strided_scatter,
+    tiled_transpose,
+)

@@ -1,0 +1,328 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Every op takes ``impl`` ∈ {'pallas', 'ref'}:
+
+* ``'pallas'`` — the TPU kernel (``interpret=True`` automatically on CPU, so
+  the same call validates on this container and compiles on real TPUs);
+* ``'ref'``    — the pure-jnp oracle (differentiable; used for training paths
+  that need gradients and as the allclose ground truth).
+
+Wrappers own all the unglamorous parts: padding counts to pack granularity,
+padding rows to lane width, and undoing both on the way out — mirroring how
+an AXI-Pack requestor aligns bursts to the bus rather than to addresses.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .stream_converters import (
+    DEFAULT_PACK_ROWS,
+    indirect_gather_kernel,
+    indirect_scatter_kernel,
+    strided_gather_kernel,
+    strided_scatter_kernel,
+)
+from .transpose import transpose_kernel
+from .spmv import spmv_ell_kernel
+from .flash_attention import flash_attention_kernel
+from .paged_decode import paged_decode_attention_kernel
+
+__all__ = [
+    "on_cpu",
+    "strided_gather",
+    "strided_scatter",
+    "indirect_gather",
+    "indirect_scatter",
+    "tiled_transpose",
+    "spmv_ell",
+    "flash_attention",
+    "paged_decode_attention",
+    "moe_dispatch",
+    "moe_combine",
+]
+
+
+def on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _interpret() -> bool:
+    # Pallas TPU kernels run through the interpreter on CPU hosts.
+    return on_cpu()
+
+
+def _pad_rows(x: jax.Array, mult: int) -> Tuple[jax.Array, int]:
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad:
+        x = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+    return x, n
+
+
+# ---------------------------------------------------------------------------
+# Stream converters
+# ---------------------------------------------------------------------------
+
+
+def strided_gather(
+    src: jax.Array, base: int, stride: int, count: int, impl: str = "pallas"
+) -> jax.Array:
+    """out[k] = src[base + k*stride] — packed strided read."""
+    if impl == "ref" or stride == 1:
+        # stride==1 → the base (contiguous) converter: plain dynamic slice.
+        return ref.strided_gather(src, base, stride, count)
+    padded = count + ((-count) % DEFAULT_PACK_ROWS)
+    # Keep padded reads in-bounds by clamping the stream tail.
+    need = base + (padded - 1) * stride + 1
+    if need > src.shape[0]:
+        src = jnp.pad(src, [(0, need - src.shape[0])] + [(0, 0)] * (src.ndim - 1))
+    out = strided_gather_kernel(src, base, stride, padded, interpret=_interpret())
+    return out[:count]
+
+
+def strided_scatter(
+    dst: jax.Array, packed: jax.Array, base: int, stride: int, impl: str = "pallas"
+) -> jax.Array:
+    """dst[base + k*stride] = packed[k] — packed strided write."""
+    if impl == "ref" or stride == 1:
+        return ref.strided_scatter(dst, packed, base, stride)
+    count = packed.shape[0]
+    if count % DEFAULT_PACK_ROWS:
+        # Tail rows are written via the ref path to avoid out-of-bounds DMAs.
+        main = count - count % DEFAULT_PACK_ROWS
+        dst = strided_scatter(dst, packed[:main], base, stride, impl) if main else dst
+        return ref.strided_scatter(
+            dst, packed[main:], base + main * stride, stride
+        )
+    return strided_scatter_kernel(dst, packed, base, stride, interpret=_interpret())
+
+
+def indirect_gather(
+    src: jax.Array, indices: jax.Array, impl: str = "pallas"
+) -> jax.Array:
+    """out[k] = src[indices[k]] — packed indirect read (in-memory indices)."""
+    if impl == "ref":
+        return ref.indirect_gather(src, indices)
+    idx, count = _pad_rows(indices.astype(jnp.int32), DEFAULT_PACK_ROWS)
+    out = indirect_gather_kernel(src, idx, interpret=_interpret())
+    return out[:count]
+
+
+def indirect_scatter(
+    dst: jax.Array,
+    packed: jax.Array,
+    indices: jax.Array,
+    mode: str = "set",
+    impl: str = "pallas",
+) -> jax.Array:
+    """dst[indices[k]] = packed[k] — packed indirect write."""
+    if impl == "ref" or mode == "add":
+        # Accumulating scatter needs read-modify-write; route to ref.
+        return ref.indirect_scatter(dst, packed, indices, mode)
+    count = packed.shape[0]
+    pad = (-count) % DEFAULT_PACK_ROWS
+    if pad:
+        # Padded slots self-scatter row `indices[-1]`'s current value — route
+        # them to a scratch row appended to dst, then drop it.
+        dst_ext = jnp.pad(dst, [(0, 1)] + [(0, 0)] * (dst.ndim - 1))
+        packed_p = jnp.pad(packed, [(0, pad)] + [(0, 0)] * (packed.ndim - 1))
+        idx_p = jnp.concatenate(
+            [indices.astype(jnp.int32), jnp.full((pad,), dst.shape[0], jnp.int32)]
+        )
+        out = indirect_scatter_kernel(dst_ext, packed_p, idx_p, interpret=_interpret())
+        return out[:-1]
+    return indirect_scatter_kernel(
+        dst, packed, indices.astype(jnp.int32), interpret=_interpret()
+    )
+
+
+# ---------------------------------------------------------------------------
+# Workload kernels
+# ---------------------------------------------------------------------------
+
+
+def tiled_transpose(x: jax.Array, block: int = 128, impl: str = "pallas") -> jax.Array:
+    if impl == "ref":
+        return ref.tiled_transpose(x)
+    r, c = x.shape
+    block = min(block, r, c)
+    pr, pc = (-r) % block, (-c) % block
+    if pr or pc:
+        x = jnp.pad(x, ((0, pr), (0, pc)))
+    out = transpose_kernel(x, block=block, interpret=_interpret())
+    return out[:c, :r]
+
+
+def spmv_ell(
+    vals: jax.Array,
+    cols: jax.Array,
+    x: jax.Array,
+    row_block: int = 8,
+    impl: str = "pallas",
+) -> jax.Array:
+    if impl == "ref":
+        return ref.spmv_ell(vals, cols, x)
+    (vals_p, r) = _pad_rows(vals, row_block)
+    (cols_p, _) = _pad_rows(cols, row_block)
+    y = spmv_ell_kernel(vals_p, cols_p, x, row_block=row_block, interpret=_interpret())
+    return y[:r]
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    impl: str = "pallas",
+) -> jax.Array:
+    """Flash attention.  impl='pallas' is fully trainable: the backward is
+    the FlashAttention-2-style kernel pair (custom_vjp; lse saved, p
+    recomputed blockwise — validated against autodiff in tests)."""
+    if impl == "ref":
+        return ref.mha(q, k, v, causal=causal, window=window, scale=scale)
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    pq, pk = (-sq) % bq, (-skv) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    out = _flash_vjp(q, k, v, causal, window, scale, bq, bk)
+    # NB: padded KV columns are masked via kv_len inside the kernel.
+    return out[:, :, :sq, :]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_vjp(q, k, v, causal, window, scale, bq, bk):
+    return flash_attention_kernel(
+        q, k, v, causal=causal, window=window, scale=scale,
+        block_q=bq, block_k=bk, interpret=_interpret(),
+    )
+
+
+def _flash_vjp_fwd(q, k, v, causal, window, scale, bq, bk):
+    from .flash_attention import flash_attention_fwd_kernel
+
+    o, lse = flash_attention_fwd_kernel(
+        q, k, v, causal=causal, window=window, scale=scale,
+        block_q=bq, block_k=bk, interpret=_interpret(),
+    )
+    return o, (q, k, v, o, lse)
+
+
+def _flash_vjp_bwd(causal, window, scale, bq, bk, res, do):
+    from .flash_attention import flash_attention_bwd_kernel
+
+    q, k, v, o, lse = res
+    dq, dk, dv = flash_attention_bwd_kernel(
+        q, k, v, o, lse, do, causal=causal, window=window, scale=scale,
+        block_q=bq, block_k=bk, interpret=_interpret(),
+    )
+    return dq, dk, dv
+
+
+_flash_vjp.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def paged_decode_attention(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    page_table: jax.Array,
+    lengths: jax.Array,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
+    scale: Optional[float] = None,
+    impl: str = "pallas",
+) -> jax.Array:
+    if impl == "ref":
+        if k_scale is not None:
+            k_pages = ref.int8_dequantize(k_pages, k_scale[..., None])
+            v_pages = ref.int8_dequantize(v_pages, v_scale[..., None])
+        return ref.paged_decode_attention(
+            q, k_pages, v_pages, page_table, lengths, scale=scale
+        )
+    return paged_decode_attention_kernel(
+        q, k_pages, v_pages, page_table, lengths,
+        k_scale=k_scale, v_scale=v_scale, scale=scale, interpret=_interpret(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# MoE packed dispatch / combine (composite over the indirect converters)
+# ---------------------------------------------------------------------------
+
+
+def moe_dispatch(
+    tokens: jax.Array,
+    expert_idx: jax.Array,
+    num_experts: int,
+    capacity: int,
+    impl: str = "pallas",
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Pack tokens into (E, C, D) expert buffers via an indirect stream.
+
+    Slot computation (ranking within expert) is cheap int arithmetic; the
+    heavy data movement — scattering token rows into expert-contiguous
+    buffers — is one packed indirect write.
+    """
+    if impl == "ref":
+        return ref.moe_dispatch(tokens, expert_idx, num_experts, capacity)
+    t, d = tokens.shape
+    k = expert_idx.shape[1]
+    flat_e = expert_idx.reshape(-1)
+    onehot = jax.nn.one_hot(flat_e, num_experts, dtype=jnp.int32)
+    pos_in_e = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot - onehot, axis=1)
+    keep = pos_in_e < capacity
+    slot = jnp.where(keep, flat_e * capacity + pos_in_e, num_experts * capacity)
+
+    tok_rep = jnp.repeat(tokens, k, axis=0)
+    buf = jnp.zeros((num_experts * capacity + 1, d), tokens.dtype)
+    buf = indirect_scatter(buf, tok_rep, slot, impl=impl)[:-1]
+
+    src = jnp.full((num_experts * capacity + 1,), -1, jnp.int32)
+    src = src.at[slot].set(jnp.arange(t * k, dtype=jnp.int32))[:-1]
+    return (
+        buf.reshape(num_experts, capacity, d),
+        src.reshape(num_experts, capacity),
+        keep.reshape(t, k),
+    )
+
+
+def moe_combine(
+    outputs: jax.Array,
+    src_index: jax.Array,
+    gate_weights: jax.Array,
+    num_tokens: int,
+    impl: str = "pallas",
+) -> jax.Array:
+    """Un-pack expert outputs to token order (indirect gather) + gate-weight."""
+    if impl == "ref":
+        return ref.moe_combine(outputs, src_index, gate_weights, num_tokens)
+    e, c, d = outputs.shape
+    k = gate_weights.shape[1]
+    flat_out = outputs.reshape(e * c, d)
+    flat_src = src_index.reshape(e * c)
+    # Invert the dispatch permutation: for each (token, k) slot find its
+    # expert-buffer position, then gather — one packed indirect read.
+    inv = jnp.full((num_tokens * k + 1,), e * c, jnp.int32)
+    inv = inv.at[jnp.where(flat_src >= 0, flat_src, num_tokens * k)].set(
+        jnp.arange(e * c, dtype=jnp.int32)
+    )[:-1]
+    flat_out_ext = jnp.pad(flat_out, ((0, 1), (0, 0)))  # row e*c = zeros (dropped)
+    contrib = indirect_gather(flat_out_ext, inv, impl=impl)
+    contrib = contrib.reshape(num_tokens, k, d)
+    return jnp.einsum("tkd,tk->td", contrib, gate_weights.astype(outputs.dtype))

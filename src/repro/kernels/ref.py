@@ -1,0 +1,256 @@
+"""Pure-jnp oracle implementations for every Pallas kernel in this package.
+
+Each function is the mathematical ground truth the kernels are validated
+against (``tests/kernels`` sweeps shapes/dtypes and asserts allclose).  They
+are also the CPU fall-back path used by the models when
+``use_pallas=False`` and the source of the differentiable reference
+semantics (kernels that need gradients wire these in through custom_vjp or
+are used forward-only).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Packed stream converters (the paper's four irregular converters)
+# ---------------------------------------------------------------------------
+
+
+def strided_gather(src: jax.Array, base: int, stride: int, count: int) -> jax.Array:
+    """out[k] = src[base + k*stride]; src (N, row), out (count, row)."""
+    idx = base + stride * jnp.arange(count)
+    return jnp.take(src, idx, axis=0, mode="clip")
+
+
+def strided_scatter(
+    dst: jax.Array, packed: jax.Array, base: int, stride: int
+) -> jax.Array:
+    """dst[base + k*stride] = packed[k]."""
+    idx = base + stride * jnp.arange(packed.shape[0])
+    return dst.at[idx].set(packed)
+
+
+def indirect_gather(src: jax.Array, indices: jax.Array) -> jax.Array:
+    """out[k] = src[indices[k]]; indices memory-resident (vlimxei semantics)."""
+    return jnp.take(src, indices, axis=0, mode="clip")
+
+
+def indirect_scatter(
+    dst: jax.Array, packed: jax.Array, indices: jax.Array, mode: str = "set"
+) -> jax.Array:
+    """dst[indices[k]] = packed[k] (or += for mode='add')."""
+    at = dst.at[indices]
+    return at.add(packed) if mode == "add" else at.set(packed)
+
+
+# ---------------------------------------------------------------------------
+# Tiled in-situ matrix transpose (ismt benchmark)
+# ---------------------------------------------------------------------------
+
+
+def tiled_transpose(x: jax.Array) -> jax.Array:
+    return jnp.swapaxes(x, -1, -2)
+
+
+# ---------------------------------------------------------------------------
+# Sparse matrix-vector product (spmv / prank / sssp benchmarks)
+# ---------------------------------------------------------------------------
+
+
+def spmv_ell(vals: jax.Array, cols: jax.Array, x: jax.Array) -> jax.Array:
+    """ELL-format SpMV: y[r] = sum_k vals[r,k] * x[cols[r,k]].
+
+    Padding entries carry ``vals == 0`` (their column index is arbitrary but
+    in-range), so they contribute nothing.
+    """
+    xg = jnp.take(x, cols, axis=0, mode="clip")
+    return jnp.sum(vals * xg, axis=-1)
+
+
+def csr_to_ell(
+    indptr: np.ndarray, indices: np.ndarray, data: np.ndarray, n_rows: int,
+    pad_to: Optional[int] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Convert CSR arrays to padded ELL (vals, cols) numpy arrays."""
+    counts = np.diff(indptr)
+    k = int(counts.max()) if pad_to is None else pad_to
+    vals = np.zeros((n_rows, k), dtype=data.dtype)
+    cols = np.zeros((n_rows, k), dtype=indices.dtype)
+    for r in range(n_rows):
+        lo, hi = indptr[r], indptr[r + 1]
+        vals[r, : hi - lo] = data[lo:hi]
+        cols[r, : hi - lo] = indices[lo:hi]
+    return vals, cols
+
+
+# ---------------------------------------------------------------------------
+# Attention (training/prefill flash + decode)
+# ---------------------------------------------------------------------------
+
+
+def _attn_mask(
+    q_len: int,
+    kv_len: int,
+    causal: bool,
+    window: Optional[int],
+    q_offset: int = 0,
+) -> jax.Array:
+    """(q_len, kv_len) boolean mask; True = attend."""
+    qi = q_offset + jnp.arange(q_len)[:, None]
+    kj = jnp.arange(kv_len)[None, :]
+    m = jnp.ones((q_len, kv_len), dtype=bool)
+    if causal:
+        m &= qi >= kj
+    if window is not None:
+        m &= qi - kj < window
+    return m
+
+
+def mha(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Reference attention. q (B,H,S,D); k,v (B,KVH,Skv,D); GQA by repeat.
+
+    ``window`` is the sliding-window size (gemma3-style local attention);
+    ``q_offset`` positions queries relative to keys (decode/prefill chunking).
+    """
+    b, h, sq, d = q.shape
+    kvh = k.shape[1]
+    if kvh != h:
+        rep = h // kvh
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    mask = _attn_mask(sq, k.shape[2], causal, window, q_offset)
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    # Fully-masked rows (can happen in padded decode) produce NaN; zero them.
+    w = jnp.where(jnp.isnan(w), 0.0, w)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def paged_decode_attention(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    page_table: jax.Array,
+    lengths: jax.Array,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Decode attention over a paged KV cache (oracle).
+
+    q:          (B, H, D)           one new query token per sequence
+    k/v_pages:  (P, page, KVH, D)   global physical page pool
+    page_table: (B, pages_per_seq)  int32 physical page ids (indirect stream)
+    lengths:    (B,)                current KV length per sequence
+    """
+    b, h, d = q.shape
+    pages_per_seq = page_table.shape[1]
+    page = k_pages.shape[1]
+    kvh = k_pages.shape[2]
+    # Gather each sequence's logical KV: (B, pages_per_seq, page, KVH, D)
+    kg = jnp.take(k_pages, page_table, axis=0)
+    vg = jnp.take(v_pages, page_table, axis=0)
+    skv = pages_per_seq * page
+    kg = kg.reshape(b, skv, kvh, d).transpose(0, 2, 1, 3)
+    vg = vg.reshape(b, skv, kvh, d).transpose(0, 2, 1, 3)
+    rep = h // kvh
+    kg = jnp.repeat(kg, rep, axis=1)
+    vg = jnp.repeat(vg, rep, axis=1)
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    logits = jnp.einsum("bhd,bhkd->bhk", q, kg).astype(jnp.float32) * scale
+    mask = jnp.arange(skv)[None, :] < lengths[:, None]
+    logits = jnp.where(mask[:, None, :], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    w = jnp.where(jnp.isnan(w), 0.0, w)
+    return jnp.einsum("bhk,bhkd->bhd", w, vg.astype(jnp.float32)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch / combine (packed token routing)
+# ---------------------------------------------------------------------------
+
+
+def moe_dispatch(
+    tokens: jax.Array, expert_idx: jax.Array, num_experts: int, capacity: int
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Pack tokens into per-expert buffers (oracle for the packed dispatch).
+
+    tokens:     (T, D) flattened token activations
+    expert_idx: (T, K) top-k expert assignment per token
+    Returns (buffers (E, C, D), src_index (E, C) original (token*K+k) slot or
+    -1 for empty, keep_mask (T, K) whether each assignment was kept).
+    """
+    t, d = tokens.shape
+    k = expert_idx.shape[1]
+    flat_e = expert_idx.reshape(-1)                      # (T*K,)
+    # Position of each assignment within its expert (stable order).
+    onehot = jax.nn.one_hot(flat_e, num_experts, dtype=jnp.int32)  # (TK, E)
+    pos = jnp.cumsum(onehot, axis=0) * onehot - onehot   # rank within expert
+    pos_in_e = jnp.sum(pos, axis=1)                      # (TK,)
+    keep = pos_in_e < capacity
+    slot = jnp.where(keep, flat_e * capacity + pos_in_e, num_experts * capacity)
+    src = jnp.full((num_experts * capacity + 1,), -1, dtype=jnp.int32)
+    src = src.at[slot].set(jnp.arange(t * k, dtype=jnp.int32))[:-1]
+    tok_rep = jnp.repeat(tokens, k, axis=0)              # (TK, D)
+    buf = jnp.where(
+        (src >= 0)[:, None], jnp.take(tok_rep, jnp.maximum(src, 0), axis=0), 0.0
+    )
+    return (
+        buf.reshape(num_experts, capacity, d),
+        src.reshape(num_experts, capacity),
+        keep.reshape(t, k),
+    )
+
+
+def moe_combine(
+    outputs: jax.Array,
+    src_index: jax.Array,
+    gate_weights: jax.Array,
+    num_tokens: int,
+) -> jax.Array:
+    """Un-pack expert outputs back to token order with gate weighting.
+
+    outputs:      (E, C, D) expert results
+    src_index:    (E, C)    original token*K+k slot (or -1)
+    gate_weights: (T, K)    router weights
+    """
+    e, c, d = outputs.shape
+    k = gate_weights.shape[1]
+    flat_out = outputs.reshape(e * c, d)
+    flat_src = src_index.reshape(e * c)
+    contrib = jnp.zeros((num_tokens * k, d), dtype=outputs.dtype)
+    contrib = contrib.at[jnp.maximum(flat_src, 0)].add(
+        jnp.where((flat_src >= 0)[:, None], flat_out, 0.0)
+    )
+    contrib = contrib.reshape(num_tokens, k, d)
+    return jnp.einsum("tkd,tk->td", contrib, gate_weights.astype(outputs.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Int8 packing (gradient compression / quantized KV)
+# ---------------------------------------------------------------------------
+
+
+def int8_quantize(x: jax.Array, axis: int = -1) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-slice int8 quantization: returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)

@@ -1,0 +1,200 @@
+"""Pallas TPU kernels for the four packed irregular-stream converters.
+
+These are the TPU-native forms of the paper's controller datapaths (Fig. 2):
+
+* ``strided_gather_kernel``  — strided read converter: rows at
+  ``base + k*stride`` are fetched by per-row DMAs whose addresses come from a
+  *static* stride in the BlockSpec ``index_map`` (no index traffic at all,
+  like the stride field of an AXI-Pack AR request), and packed densely into
+  bus-aligned (``pack_rows`` × row) VMEM tiles by the beat-packer pattern
+  (an output block revisited across grid steps).
+* ``strided_scatter_kernel`` — strided write converter (beat unpacker).
+* ``indirect_gather_kernel`` — indirect read converter: the index array is
+  **scalar-prefetched into SMEM** and consumed by the ``index_map``, so the
+  DMA engine itself resolves the indirection near memory — the Pallas
+  equivalent of the paper's index stage feeding the element request
+  generator.  The compute core only ever sees packed dense tiles.
+* ``indirect_scatter_kernel`` — indirect write converter (aliased output so
+  untouched destination rows are preserved; duplicate indices are
+  last-writer-wins in grid order, matching the unspecified-order hardware
+  semantics).
+
+Hardware-adaptation note: AXI-Pack packs at *word* (32-bit) granularity
+because its banked endpoint has 32-bit banks.  HBM has no word-granular
+access — the efficient granule is a ~512 B transaction — so the TPU-native
+stream granule is a **row** (≥128 lanes).  Element-granular strided access is
+provided by the models/benchmarks at tile level (e.g. ismt works on (8,128)
+tiles); see DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_PACK_ROWS = 8  # rows per packed VMEM tile (f32 sublane count)
+
+
+# ---------------------------------------------------------------------------
+# Strided read converter
+# ---------------------------------------------------------------------------
+
+
+def _strided_gather_body(src_ref, out_ref, *, pack_rows: int):
+    i = pl.program_id(0)
+    out_ref[pl.ds(i % pack_rows, 1), :] = src_ref[...]
+
+
+def strided_gather_kernel(
+    src: jax.Array,
+    base: int,
+    stride: int,
+    count: int,
+    pack_rows: int = DEFAULT_PACK_ROWS,
+    interpret: bool = False,
+) -> jax.Array:
+    """Gather ``count`` rows at ``base + k*stride`` into a packed (count, row) block.
+
+    ``base``/``stride`` are static, mirroring the AR user field of a strided
+    AXI-Pack burst: the request fully describes the stream, no index memory
+    traffic is issued.
+    """
+    n_rows, row_w = src.shape
+    assert count % pack_rows == 0, "wrapper must pad count to pack_rows"
+    grid = (count,)
+    return pl.pallas_call(
+        functools.partial(_strided_gather_body, pack_rows=pack_rows),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, row_w), lambda i: (base + i * stride, 0)),
+        ],
+        out_specs=pl.BlockSpec((pack_rows, row_w), lambda i: (i // pack_rows, 0)),
+        out_shape=jax.ShapeDtypeStruct((count, row_w), src.dtype),
+        interpret=interpret,
+    )(src)
+
+
+# ---------------------------------------------------------------------------
+# Strided write converter
+# ---------------------------------------------------------------------------
+
+
+def _strided_scatter_body(packed_ref, dst_ref, out_ref, *, pack_rows: int):
+    i = pl.program_id(0)
+    out_ref[...] = packed_ref[pl.ds(i % pack_rows, 1), :]
+
+
+def strided_scatter_kernel(
+    dst: jax.Array,
+    packed: jax.Array,
+    base: int,
+    stride: int,
+    pack_rows: int = DEFAULT_PACK_ROWS,
+    interpret: bool = False,
+) -> jax.Array:
+    """Scatter packed rows to ``dst[base + k*stride]`` (beat unpacker)."""
+    count, row_w = packed.shape
+    assert count % pack_rows == 0
+    return pl.pallas_call(
+        functools.partial(_strided_scatter_body, pack_rows=pack_rows),
+        grid=(count,),
+        in_specs=[
+            pl.BlockSpec((pack_rows, row_w), lambda i: (i // pack_rows, 0)),
+            pl.BlockSpec((1, row_w), lambda i: (0, 0)),  # alias anchor only
+        ],
+        out_specs=pl.BlockSpec((1, row_w), lambda i: (base + i * stride, 0)),
+        out_shape=jax.ShapeDtypeStruct(dst.shape, dst.dtype),
+        input_output_aliases={1: 0},
+        interpret=interpret,
+    )(packed, dst)
+
+
+# ---------------------------------------------------------------------------
+# Indirect read converter (scalar-prefetched index stage)
+# ---------------------------------------------------------------------------
+
+
+def _indirect_gather_body(idx_ref, src_ref, out_ref, *, pack_rows: int):
+    i = pl.program_id(0)
+    out_ref[pl.ds(i % pack_rows, 1), :] = src_ref[...]
+
+
+def indirect_gather_kernel(
+    src: jax.Array,
+    indices: jax.Array,
+    pack_rows: int = DEFAULT_PACK_ROWS,
+    interpret: bool = False,
+) -> jax.Array:
+    """Gather rows ``src[indices[k]]`` into a packed block.
+
+    The index array rides the scalar-prefetch channel (SMEM) and is consumed
+    by the BlockSpec ``index_map`` — the element DMAs are issued directly
+    from the indices without the data ever detouring through the core, the
+    exact analogue of memory-side indirection (``vlimxei``).
+    """
+    n_rows, row_w = src.shape
+    (count,) = indices.shape
+    assert count % pack_rows == 0
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(count,),
+        in_specs=[
+            pl.BlockSpec((1, row_w), lambda i, idx_ref: (idx_ref[i], 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (pack_rows, row_w), lambda i, idx_ref: (i // pack_rows, 0)
+        ),
+    )
+    return pl.pallas_call(
+        functools.partial(_indirect_gather_body, pack_rows=pack_rows),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((count, row_w), src.dtype),
+        interpret=interpret,
+    )(indices, src)
+
+
+# ---------------------------------------------------------------------------
+# Indirect write converter
+# ---------------------------------------------------------------------------
+
+
+def _indirect_scatter_body(idx_ref, packed_ref, dst_ref, out_ref, *, pack_rows: int):
+    i = pl.program_id(0)
+    out_ref[...] = packed_ref[pl.ds(i % pack_rows, 1), :]
+
+
+def indirect_scatter_kernel(
+    dst: jax.Array,
+    packed: jax.Array,
+    indices: jax.Array,
+    pack_rows: int = DEFAULT_PACK_ROWS,
+    interpret: bool = False,
+) -> jax.Array:
+    """Scatter packed rows to ``dst[indices[k]]``; untouched rows preserved.
+
+    Duplicate indices resolve last-writer-wins in grid order (hardware leaves
+    the order unspecified; callers needing accumulation use the ``ref`` add
+    path or MoE combine).
+    """
+    count, row_w = packed.shape
+    assert count % pack_rows == 0
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(count,),
+        in_specs=[
+            pl.BlockSpec((pack_rows, row_w), lambda i, idx_ref: (i // pack_rows, 0)),
+            pl.BlockSpec((1, row_w), lambda i, idx_ref: (0, 0)),  # alias anchor
+        ],
+        out_specs=pl.BlockSpec((1, row_w), lambda i, idx_ref: (idx_ref[i], 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_indirect_scatter_body, pack_rows=pack_rows),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(dst.shape, dst.dtype),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(indices, packed, dst)

@@ -1,0 +1,5 @@
+"""Launchers: production mesh, multi-pod dry-run, train and serve drivers.
+
+NOTE: import ``repro.launch.dryrun`` only as a __main__ entry point — it sets
+the 512-fake-device XLA flag at import time.
+"""

@@ -1,0 +1,164 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    # CPU-backend artifacts that inflate the memory picture vs TPU:
+    # WLICM hoists the bf16→f32 convert of the whole remat residual stack
+    # out of the backward loop (+7.7 GB/dev on arctic; TPU runs bf16
+    # natively so the convert does not exist there).
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion,convert-mover "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware:
+
+* ``.lower().compile()`` must succeed on the 16×16 single-pod mesh and the
+  2×16×16 multi-pod mesh for every live cell (32 of the 40 nominal; skips
+  are principled, DESIGN.md §4);
+* ``memory_analysis()`` per-device bytes prove the cell fits 16 GB HBM;
+* ``cost_analysis()`` + loop-aware HLO parsing feed the §Roofline terms.
+
+Artifacts land in ``artifacts/dryrun/<arch>__<shape>__<mesh>.json``.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--quick]
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import ALL_ARCH_NAMES, applicable_shapes, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch import hlo_analysis
+from repro.launch.specs import build_cell
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun")
+
+# v5e hardware constants (roofline denominators)
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (per chip, one direction)
+
+
+def run_cell(
+    arch: str,
+    shape: str,
+    multi_pod: bool = False,
+    save: bool = True,
+    analyze_hlo: bool = True,
+) -> Dict[str, Any]:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    cell = build_cell(arch, shape, mesh, tp=16)
+
+    with mesh:
+        jitted = jax.jit(
+            cell.step_fn,
+            in_shardings=cell.in_shardings,
+            donate_argnums=cell.donate,
+        )
+        lowered = jitted.lower(*cell.args_sds)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    rec: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_name,
+        "chips": n_chips,
+        "ok": True,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_per_device_gb": round(
+                (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                 + ma.output_size_in_bytes - ma.alias_size_in_bytes) / 2**30, 3
+            ),
+        },
+        "cost_analysis": {
+            "flops_per_device_loopbody_once": float(ca.get("flops", -1)),
+            "bytes_accessed_loopbody_once": float(ca.get("bytes accessed", -1)),
+        },
+    }
+
+    if analyze_hlo:
+        txt = compiled.as_text()
+        rec["hlo_chars"] = len(txt)
+        colls = hlo_analysis.collect_collectives(txt)
+        rec["collectives"] = hlo_analysis.summarize_collectives(colls)
+        rec["collective_wire_bytes_per_device"] = sum(c.wire_bytes for c in colls)
+        rec["loop_aware_dot_flops_per_device"] = hlo_analysis.loop_aware_flops(txt)
+        del txt
+
+    if save:
+        os.makedirs(ARTIFACT_DIR, exist_ok=True)
+        path = os.path.join(ARTIFACT_DIR, f"{arch}__{shape}__{mesh_name}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        rec["artifact"] = path
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-hlo", action="store_true", help="skip HLO text analysis")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ALL_ARCH_NAMES:
+            for sh in applicable_shapes(get_config(arch)):
+                cells.append((arch, sh.name))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    failures = []
+    for multi_pod in meshes:
+        for arch, shape in cells:
+            tag = f"{arch:16s} {shape:12s} {'2x16x16' if multi_pod else '16x16'}"
+            try:
+                rec = run_cell(arch, shape, multi_pod, analyze_hlo=not args.no_hlo)
+                mem = rec["memory"]["peak_per_device_gb"]
+                wire = rec.get("collective_wire_bytes_per_device", 0) / 2**20
+                print(f"OK   {tag} mem/dev={mem:7.3f}GB "
+                      f"coll={wire:9.1f}MiB compile={rec['compile_s']:.1f}s",
+                      flush=True)
+            except Exception as e:  # noqa: BLE001 — report and continue
+                failures.append((tag, repr(e)))
+                print(f"FAIL {tag}: {e}", flush=True)
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES")
+        raise SystemExit(1)
+    print("\nALL CELLS PASSED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,259 @@
+"""Loop-aware HLO analysis: collective bytes and dot FLOPs from compiled text.
+
+``compiled.cost_analysis()`` visits ``while`` bodies once, so anything under
+``lax.scan`` (layer stacks, KV chunks, SSM chunks, loss chunks) is
+undercounted.  This parser rebuilds loop-aware totals:
+
+1. split the HLO module into computations;
+2. find every ``while`` op, resolve its body/condition computations, and
+   read the trip count from the condition's loop-bound constant;
+3. propagate multipliers through the call graph (nested scans multiply);
+4. sum collective payloads and dot FLOPs × their computation's multiplier.
+
+Wire bytes use the standard ring formulas with the participant group size g
+parsed from ``replica_groups``:
+
+    all-reduce       2·(g-1)/g · bytes      reduce-scatter  (g-1)/g · bytes_in
+    all-gather       (g-1)/g · bytes_out    all-to-all      (g-1)/g · bytes
+    collective-permute  bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-_]+)\s*(?:\([^)]*\))?\s*->.*{\s*$")
+_CALLED = re.compile(
+    r"(?:calls=|to_apply=|body=|condition=|branches=\{)%?([\w\.\-_]+)"
+)
+_BRANCHES = re.compile(r"branches=\{([^}]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """'bf16[16,512,128]' → bytes.  Tuples handled by summing members."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    bytes_payload: int
+    group_size: int
+    computation: str
+    multiplier: float = 1.0
+
+    @property
+    def wire_bytes(self) -> float:
+        g = max(self.group_size, 1)
+        b = self.bytes_payload * self.multiplier
+        if self.kind == "all-reduce":
+            return 2.0 * (g - 1) / g * b
+        if self.kind == "collective-permute":
+            return b
+        return (g - 1) / g * b
+
+
+def split_computations(hlo: str) -> Dict[str, List[str]]:
+    """Computation definitions start at column 0 and end with '{'; the name
+    is the first token (minus ENTRY/%).  Tuple-typed parameter lists contain
+    nested parens, so we deliberately avoid parsing the signature."""
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        if line and not line[0].isspace() and line.rstrip().endswith("{"):
+            name = line.split()[0]
+            if name == "ENTRY":
+                name = line.split()[1]
+            name = name.lstrip("%").split("(")[0]
+            if name in ("HloModule",):
+                continue
+            cur = name
+            comps[cur] = []
+            continue
+        stripped = line.strip()
+        if cur is not None:
+            if stripped == "}" or stripped.startswith("} //"):
+                cur = None
+            else:
+                comps[cur].append(stripped)
+    return comps
+
+
+def _called_computations(line: str) -> List[str]:
+    names = _CALLED.findall(line)
+    mb = _BRANCHES.search(line)
+    if mb:
+        names += [n.strip().lstrip("%") for n in mb.group(1).split(",")]
+    return names
+
+
+_KNOWN_TRIPS = re.compile(r'known_trip_count"?\s*[:=]\s*\{"?n"?\s*[:=]\s*"?(\d+)')
+
+
+def _trip_count(while_line: str, cond_lines: List[str]) -> int:
+    """Trip count: XLA's known_trip_count annotation, else the loop-bound
+    constant in the condition computation."""
+    m = _KNOWN_TRIPS.search(while_line)
+    if m:
+        return int(m.group(1))
+    best = 1
+    for ln in cond_lines:
+        if "constant(" in ln and ("s32" in ln or "u32" in ln):
+            for mm in re.finditer(r"constant\((\d+)\)", ln):
+                best = max(best, int(mm.group(1)))
+    return best
+
+
+def computation_multipliers(hlo: str) -> Tuple[Dict[str, float], Dict[str, List[str]]]:
+    comps = split_computations(hlo)
+    entry = None
+    for line in hlo.splitlines():
+        m = re.match(r"^ENTRY\s+%?([\w\.\-_]+)", line.strip())
+        if m:
+            entry = m.group(1)
+            break
+    if entry is None:
+        entry = next(iter(comps))
+
+    mult: Dict[str, float] = defaultdict(float)
+
+    def visit(name: str, m: float, depth=0):
+        if name not in comps or depth > 64:
+            return
+        mult[name] += m
+        for line in comps[name]:
+            called = _called_computations(line)
+            if not called:
+                continue
+            if " while(" in line:
+                body = re.search(r"body=%?([\w\.\-_]+)", line)
+                cond = re.search(r"condition=%?([\w\.\-_]+)", line)
+                trips = _trip_count(
+                    line, comps.get(cond.group(1), []) if cond else []
+                )
+                if body:
+                    visit(body.group(1), m * trips, depth + 1)
+                if cond:
+                    visit(cond.group(1), m * (trips + 1), depth + 1)
+            else:
+                for c in set(called):
+                    visit(c, m, depth + 1)
+
+    visit(entry, 1.0)
+    return dict(mult), comps
+
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[\w\[\],{}]+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def collect_collectives(hlo: str) -> List[CollectiveOp]:
+    mult, comps = computation_multipliers(hlo)
+    out: List[CollectiveOp] = []
+    for cname, lines in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for ln in lines:
+            cm = _COLL_RE.search(ln)
+            if not cm or "-done(" in ln:
+                continue
+            type_str, kind = cm.groups()
+            payload = _shape_bytes(type_str)
+            g = 1
+            gm = _GROUPS_RE.search(ln)
+            if gm:
+                g = len(gm.group(1).split(","))
+            else:
+                gi = _GROUPS_IOTA.search(ln)
+                if gi:
+                    g = int(gi.group(2))
+            out.append(CollectiveOp(kind, payload, g, cname, m))
+    return out
+
+
+_DOT_RE = re.compile(r"=\s*(\w+\[[\d,]*\](?:\{[\d,]*\})?)\s+dot\(")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_LHS_RE = re.compile(r"dot\((%?[\w\.\-_]+)")
+_DEF_RE = re.compile(r"^(%?[\w\.\-_]+)\s*=\s*(\w+\[[\d,]*\])")
+
+
+def _instruction_shapes(comps: Dict[str, List[str]]) -> Dict[str, str]:
+    shapes: Dict[str, str] = {}
+    for lines in comps.values():
+        for ln in lines:
+            m = _DEF_RE.match(ln)
+            if m:
+                shapes[m.group(1).lstrip("%")] = m.group(2)
+    return shapes
+
+
+def loop_aware_flops(hlo: str) -> float:
+    """Σ over dot ops: 2 · prod(out shape) · prod(contracted dims) · mult."""
+    mult, comps = computation_multipliers(hlo)
+    shapes = _instruction_shapes(comps)
+    total = 0.0
+    for cname, lines in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for ln in lines:
+            dm = _DOT_RE.search(ln)
+            if not dm:
+                continue
+            sm = _SHAPE_RE.search(dm.group(1))
+            if not sm:
+                continue
+            out_elems = 1
+            for d in sm.group(2).split(","):
+                if d:
+                    out_elems *= int(d)
+            # contracted size from the lhs operand's recorded shape
+            k = 1
+            cmatch = _CONTRACT_RE.search(ln)
+            lhs = _LHS_RE.search(ln)
+            if cmatch and lhs:
+                lhs_type = shapes.get(lhs.group(1).lstrip("%"), "")
+                sl = _SHAPE_RE.search(lhs_type)
+                if sl:
+                    dims = [int(d) for d in sl.group(2).split(",") if d]
+                    for ci in cmatch.group(1).split(","):
+                        if ci and int(ci) < len(dims):
+                            k *= dims[int(ci)]
+            total += 2.0 * out_elems * k * m
+    return total
+
+
+def summarize_collectives(ops: List[CollectiveOp]) -> Dict[str, Dict[str, float]]:
+    agg: Dict[str, Dict[str, float]] = defaultdict(lambda: {"count": 0, "payload": 0.0, "wire": 0.0})
+    for op in ops:
+        a = agg[op.kind]
+        a["count"] += op.multiplier
+        a["payload"] += op.bytes_payload * op.multiplier
+        a["wire"] += op.wire_bytes
+    return dict(agg)

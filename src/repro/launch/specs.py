@@ -1,0 +1,279 @@
+"""Dry-run input specs: ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, zero allocation.  Each (arch × shape) cell maps
+to a step function + its abstract inputs + sharding trees; the dry-run lowers
+``jax.jit(step, in_shardings=...)`` against these.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import ArchConfig, SHAPES, ShapeConfig
+from repro.models import lm
+from repro.models.common import Param, map_params
+from repro.optim import OptimizerConfig, make_optimizer
+from repro.parallel.sharding import ShardingRules, make_rules, param_specs
+from repro.train import make_train_step
+
+SDS = jax.ShapeDtypeStruct
+
+
+def rules_for(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh) -> ShardingRules:
+    """Shape-kind-aware rules (DESIGN.md §5).
+
+    Decode/prefill shard the KV cache over sequence ('model' axis; flash-
+    decoding SP) so kv_heads stay replicated there; training shards kv heads
+    when the config allows.  long_500k (batch=1 < data axis) shards cache
+    sequence over (data, model) and leaves batch unsharded.
+    """
+    with_pod = "pod" in mesh.axis_names
+    batch_axes: Any = ("pod", "data") if with_pod else ("data",)
+    cache_seq: Any = "model"
+    cache_batch: Any = ("pod", "data") if with_pod else "data"
+    if shape.kind == "train":
+        return make_rules(
+            fsdp=cfg.fsdp,
+            shard_kv_heads=cfg.shard_kv_heads,
+            batch_axes=batch_axes,
+            with_pod=with_pod,
+            mesh=mesh,
+        )
+    # serving kinds
+    if shape.global_batch % (np.prod([mesh.shape[a] for a in batch_axes])) != 0:
+        # batch too small for the data axis (long_500k): shard seq over all.
+        batch_axes = None
+        cache_batch = None
+        cache_seq = ("data", "model") if not with_pod else ("pod", "data", "model")
+    # Serving weight-sharding split (§Perf): FSDP-style data-axis weight
+    # sharding forces per-token all-gathers of every layer's weights — the
+    # dominant decode collective (7.8 GB/token on qwen1.5-32b).  Attention
+    # weights go model-only (hot path, small); MLP weights keep the data-axis
+    # shard only where model-only weights would not fit HBM next to the cache.
+    serving_fsdp_mlp = (cfg.fsdp and not cfg.serve_mlp_int8
+                        and cfg.param_count() * 2 / 16 > 3e9)
+    return make_rules(
+        fsdp=False,
+        fsdp_mlp=serving_fsdp_mlp,
+        shard_kv_heads=False,
+        batch_axes=batch_axes,
+        cache_seq_axes=cache_seq,
+        cache_batch_axes=cache_batch,
+        with_pod=with_pod,
+        mesh=mesh,
+    )
+
+
+def batch_specs(
+    cfg: ArchConfig, shape: ShapeConfig, rules: ShardingRules, mesh: Mesh
+) -> Tuple[Dict[str, SDS], Dict[str, NamedSharding]]:
+    """Abstract train/prefill batch + shardings."""
+    b, s = shape.global_batch, shape.seq_len
+    bspec = rules.spec(("batch", "seq"))
+    sds: Dict[str, SDS] = {}
+    shd: Dict[str, NamedSharding] = {}
+
+    def add(name, shape_, dtype, spec):
+        sds[name] = SDS(shape_, dtype)
+        shd[name] = NamedSharding(mesh, spec)
+
+    if cfg.modality == "audio":
+        add("frontend", (b, s, cfg.frontend_dim), jnp.float32,
+            rules.spec(("batch", "seq", None)))
+    else:
+        s_text = s - (cfg.frontend_len if cfg.modality == "vlm" else 0)
+        add("tokens", (b, s_text), jnp.int32, bspec)
+        if cfg.modality == "vlm":
+            add("frontend", (b, cfg.frontend_len, cfg.frontend_dim), jnp.float32,
+                rules.spec(("batch", None, None)))
+    if shape.kind == "train":
+        add("targets", (b, s), jnp.int32, bspec)
+        add("mask", (b, s), jnp.float32, bspec)
+    return sds, shd
+
+
+def param_structs(
+    cfg: ArchConfig, rules: ShardingRules, mesh: Mesh, tp: int,
+    serving: bool = False,
+):
+    """(SDS tree, NamedSharding tree) for the model parameters.
+
+    Serving uses bf16 weights (inference checkpoints are cast once at load);
+    training keeps ``cfg.param_dtype``.
+    """
+    sds = jax.eval_shape(lambda: lm.init_model(cfg, jax.random.PRNGKey(0), tp=tp))
+    if serving:
+        sds = jax.tree_util.tree_map(
+            lambda s: SDS(s.shape, cfg.compute_dtype)
+            if jnp.issubdtype(s.dtype, jnp.floating) else s,
+            sds,
+        )
+    specs = param_specs(lm.model_defs(cfg, tp), rules)
+    shardings = jax.tree_util.tree_map(
+        lambda sp: NamedSharding(mesh, sp), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return sds, shardings
+
+
+def cache_structs(
+    cfg: ArchConfig, shape: ShapeConfig, rules: ShardingRules, mesh: Mesh, tp: int
+):
+    sds = jax.eval_shape(
+        lambda: lm.init_cache(cfg, shape.global_batch, shape.seq_len, tp=tp)
+    )
+    dims = lm.cache_dims_tree(cfg)
+    shardings = jax.tree_util.tree_map(
+        lambda d: NamedSharding(mesh, rules.spec(d)),
+        dims,
+        is_leaf=lambda d: isinstance(d, tuple),
+    )
+    return sds, shardings
+
+
+@dataclasses.dataclass
+class Cell:
+    """One dry-run cell: step fn + abstract args + shardings."""
+
+    arch: str
+    shape: str
+    step_fn: Callable
+    args_sds: Tuple
+    in_shardings: Tuple
+    donate: Tuple[int, ...] = ()
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh, tp: int = 16) -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rules = rules_for(cfg, shape, mesh)
+    p_sds, p_shd = param_structs(cfg, rules, mesh, tp)
+
+    if shape.kind == "train":
+        opt = make_optimizer(OptimizerConfig(name=cfg.optimizer))
+        o_sds = jax.eval_shape(opt.init, p_sds)
+        # optimizer state mirrors parameter sharding leaf-wise (ZeRO via fsdp)
+        o_shd = _opt_shardings(o_sds, p_shd, mesh)
+        b_sds, b_shd = batch_specs(cfg, shape, rules, mesh)
+        # Microbatch so each device holds ≤2 sequences of activations/residual
+        # stacks at a time (production practice; keeps every arch <16 GB HBM).
+        dp = 1
+        for a in ("pod", "data"):
+            if a in mesh.axis_names:
+                dp *= mesh.shape[a]
+        b_local = max(1, shape.global_batch // dp)
+        grad_accum = max(1, b_local // 2)
+        if os.environ.get("REPRO_GRAD_ACCUM"):
+            grad_accum = int(os.environ["REPRO_GRAD_ACCUM"])
+        step = make_train_step(cfg, opt, rules, grad_accum=grad_accum)
+        return Cell(
+            arch, shape_name, step,
+            (p_sds, o_sds, b_sds, SDS((), jnp.int32)),
+            (p_shd, o_shd, b_shd, replicated(mesh)),
+            donate=(0, 1),  # params/opt_state update in place (as in training)
+        )
+
+    # Serving: bf16 weights, cache donated (in-place update, no double buffer).
+    p_sds, p_shd = param_structs(cfg, rules, mesh, tp, serving=True)
+    if cfg.serve_mlp_int8:
+        p_sds, p_shd = lm.quantize_mlp_structs(p_sds, p_shd, cfg)
+
+    if shape.kind == "prefill":
+        b_sds, b_shd = batch_specs(cfg, shape, rules, mesh)
+        c_sds, c_shd = cache_structs(cfg, shape, rules, mesh, tp)
+
+        def prefill_step(params, batch, cache):
+            if cfg.prefill_chunk:
+                return lm.prefill_chunked(
+                    params, batch, cache, cfg, rules, cfg.prefill_chunk
+                )
+            return lm.prefill(params, batch, cache, cfg, rules)
+
+        return Cell(
+            arch, shape_name, prefill_step,
+            (p_sds, b_sds, c_sds), (p_shd, b_shd, c_shd), donate=(2,),
+        )
+
+    # decode
+    rules_d = rules
+    c_sds, c_shd = cache_structs(cfg, shape, rules_d, mesh, tp)
+    b = shape.global_batch
+    tok_sds = SDS((b, 1), jnp.int32)
+    tok_shd = NamedSharding(mesh, rules_d.spec(("batch", "seq")))
+
+    def decode(params, tokens, cache, pos):
+        return lm.decode_step(params, tokens, cache, pos, cfg, rules_d)
+
+    return Cell(
+        arch, shape_name, decode,
+        (p_sds, tok_sds, c_sds, SDS((), jnp.int32)),
+        (p_shd, tok_shd, c_shd, replicated(mesh)), donate=(2,),
+    )
+
+
+def _opt_shardings(o_sds, p_shd, mesh: Mesh):
+    """Leaf-wise: each optimizer slot reuses its parameter's sharding if the
+    shape matches; factored/scalar slots fall back to a compatible prefix."""
+    flat_p, _ = jax.tree_util.tree_flatten(p_shd)
+
+    def assign(path, leaf):
+        # path like ('m'|'v'|..., <param path...>) — match on trailing shape.
+        for cand in flat_p:
+            pass
+        return None
+
+    # Simpler: walk the two trees in parallel where structure matches.
+    def match(o_leaf, p_sharding):
+        return p_sharding
+
+    # The optimizer state for AdamW is {m: tree, v: tree} with the same
+    # structure; Adafactor nests {vr, vc, m} per leaf.  Handle both.
+    def build(o_sub, p_sub):
+        if isinstance(o_sub, dict) and set(o_sub) <= {"m", "v", "vr", "vc"}:
+            out = {}
+            for k, v in o_sub.items():
+                if hasattr(v, "shape"):
+                    out[k] = _compatible_sharding(v, p_sub, mesh)
+                else:
+                    out[k] = build(v, p_sub)
+            return out
+        if isinstance(o_sub, dict):
+            return {k: build(v, p_sub[k] if isinstance(p_sub, dict) else p_sub)
+                    for k, v in o_sub.items()}
+        return p_sub
+
+    return build(o_sds, p_shd)
+
+
+def _compatible_sharding(sds, p_sharding, mesh: Mesh):
+    """Sharding for an optimizer slot of shape sds given its param sharding."""
+    if not isinstance(p_sharding, NamedSharding):
+        return replicated(mesh)
+    spec = list(p_sharding.spec)
+    nd = len(sds.shape)
+    if len(spec) == nd:
+        return p_sharding
+    # factored slots drop a trailing/penultimate dim: keep the prefix axes
+    # that still divide.
+    spec = spec[:nd]
+    out = []
+    for size, ax in zip(sds.shape, spec + [None] * (nd - len(spec))):
+        n = 1
+        if ax is not None:
+            axes = (ax,) if isinstance(ax, str) else tuple(ax)
+            for a in axes:
+                n *= mesh.shape[a]
+        out.append(ax if size % max(n, 1) == 0 else None)
+    return NamedSharding(mesh, P(*out))

@@ -1,0 +1,2 @@
+"""Model zoo: composable blocks + top-level LM assembly for all families."""
+from . import attention, common, lm, mamba, mlp, rwkv6

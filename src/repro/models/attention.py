@@ -1,0 +1,221 @@
+"""GQA attention layer: QKV(+bias) projections, RoPE, sliding windows, caches.
+
+Three execution paths share one parameter set:
+
+* train/prefill — chunked flash attention (differentiable, O(chunk) memory);
+* decode        — one-token query against a sequence-sharded KV cache
+                  (flash-decoding SP: softmax reductions over the sharded seq
+                  dim lower to psums);
+* decode (int8) — quantized KV cache (packed narrow elements, §III-E analogue).
+
+gemma3-style mixed local/global stacks run inside one ``lax.scan``: the
+per-layer ``is_global`` flag is a *traced* scalar steering the mask and RoPE
+theta, so both layer kinds compile once.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ref as kref
+from repro.parallel.sharding import ShardingRules, constrain
+from .common import Param, apply_rope, chunked_mha
+
+
+def attention_defs(cfg: ArchConfig, q_heads: int, kv_heads: int) -> Dict[str, Param]:
+    d, hd = cfg.d_model, cfg.hd
+    defs = {
+        "wq": Param((d, q_heads, hd), ("fsdp", "heads", "head_dim")),
+        "wk": Param((d, kv_heads, hd), ("fsdp", "kv_heads_w", "head_dim")),
+        "wv": Param((d, kv_heads, hd), ("fsdp", "kv_heads_w", "head_dim")),
+        "wo": Param((q_heads, hd, d), ("heads", "head_dim", "fsdp")),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = Param((q_heads, hd), ("heads", "head_dim"), init="zeros")
+        defs["bk"] = Param((kv_heads, hd), ("kv_heads_w", "head_dim"), init="zeros")
+        defs["bv"] = Param((kv_heads, hd), ("kv_heads_w", "head_dim"), init="zeros")
+    return defs
+
+
+def _qkv(p, x, cfg: ArchConfig, rules: ShardingRules):
+    dt = cfg.compute_dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = constrain(q, rules, ("act_batch", "seq", "heads", "head_dim"))
+    k = constrain(k, rules, ("act_batch", "seq", "kv_heads", "head_dim"))
+    v = constrain(v, rules, ("act_batch", "seq", "kv_heads", "head_dim"))
+    return q, k, v
+
+
+def _rope_dual(x, positions, cfg: ArchConfig, is_global):
+    """RoPE with traced local/global theta select (gemma3: 10k local, 1M global)."""
+    if cfg.global_interval is None:
+        return apply_rope(x, positions, cfg.rope_theta)
+    local = apply_rope(x, positions, 1e4)
+    glob = apply_rope(x, positions, cfg.rope_theta)
+    flag = jnp.asarray(is_global, x.dtype)
+    return glob * flag + local * (1.0 - flag)
+
+
+def _masked_attention(
+    q, k, v, cfg: ArchConfig, is_global, q_offset, kv_len=None, kv_chunk=1024
+):
+    """Attention with a traced window on/off switch (single compiled body,
+    chunked online-softmax — never materializes (S, Skv) scores)."""
+    if cfg.window is None:
+        return chunked_mha(
+            q, k, v, causal=cfg.causal, window=None,
+            q_offset=q_offset, kv_chunk=kv_chunk,
+        )
+    # Mixed stack (gemma3 5:1, hymba's 3 global layers): the window applies
+    # only when the traced flag says local.
+    return chunked_mha(
+        q, k, v, causal=cfg.causal, window=cfg.window,
+        q_offset=q_offset, kv_chunk=kv_chunk,
+        window_flag=jnp.asarray(is_global, bool),
+    )
+
+
+def attention_fwd(
+    p: Dict[str, jax.Array],
+    x: jax.Array,
+    cfg: ArchConfig,
+    rules: ShardingRules,
+    is_global,
+    positions: jax.Array,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Full-sequence path (train / prefill without cache)."""
+    q, k, v = _qkv(p, x, cfg, rules)
+    q = _rope_dual(q, positions, cfg, is_global)
+    k = _rope_dual(k, positions, cfg, is_global)
+    if cfg.global_interval is None:
+        out = _masked_attention(q, k, v, cfg, is_global, q_offset=0, kv_chunk=kv_chunk)
+    else:
+        out = _masked_attention(q, k, v, cfg, is_global, q_offset=0)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cfg.compute_dtype))
+    return constrain(out, rules, ("act_batch", "seq", "d_model"))
+
+
+# ---------------------------------------------------------------------------
+# KV cache (contiguous, sequence-sharded) — prefill fill + decode step
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(
+    cfg: ArchConfig, q_heads: int, kv_heads: int, batch: int, max_len: int
+):
+    """Per-layer cache arrays (stacked over layers by the caller)."""
+    hd = cfg.hd
+    if cfg.cache_dtype == "int8":
+        return {
+            "k": jnp.zeros((batch, max_len, kv_heads, hd), jnp.int8),
+            "v": jnp.zeros((batch, max_len, kv_heads, hd), jnp.int8),
+            "k_scale": jnp.zeros((batch, max_len, kv_heads), jnp.float32),
+            "v_scale": jnp.zeros((batch, max_len, kv_heads), jnp.float32),
+        }
+    return {
+        "k": jnp.zeros((batch, max_len, kv_heads, hd), cfg.compute_dtype),
+        "v": jnp.zeros((batch, max_len, kv_heads, hd), cfg.compute_dtype),
+    }
+
+
+def cache_dims(cfg: ArchConfig):
+    """Logical dims of each cache leaf (for sharding specs)."""
+    dims4 = ("cache_batch", "cache_seq", "kv_heads", "head_dim")
+    dims3 = ("cache_batch", "cache_seq", "kv_heads")
+    if cfg.cache_dtype == "int8":
+        return {"k": dims4, "v": dims4, "k_scale": dims3, "v_scale": dims3}
+    return {"k": dims4, "v": dims4}
+
+
+def _store_kv(cache, k_new, v_new, pos, cfg: ArchConfig, rules: ShardingRules):
+    """Write S_new tokens at ``pos`` into the (sharded) cache."""
+    dims = cache_dims(cfg)
+    if cfg.cache_dtype == "int8":
+        kq, ks = kref.int8_quantize(k_new, axis=-1)
+        vq, vs = kref.int8_quantize(v_new, axis=-1)
+        upd = {
+            "k": kq, "v": vq, "k_scale": ks[..., 0], "v_scale": vs[..., 0],
+        }
+    else:
+        upd = {"k": k_new.astype(cache["k"].dtype), "v": v_new.astype(cache["v"].dtype)}
+    out = {}
+    for name, val in upd.items():
+        start = (0, pos) + (0,) * (val.ndim - 2)
+        new = jax.lax.dynamic_update_slice(cache[name], val, start)
+        out[name] = constrain(new, rules, dims[name])
+    return out
+
+
+def _read_kv(cache, cfg: ArchConfig):
+    if cfg.cache_dtype == "int8":
+        k = cache["k"].astype(jnp.float32) * cache["k_scale"][..., None]
+        v = cache["v"].astype(jnp.float32) * cache["v_scale"][..., None]
+        return k.astype(cfg.compute_dtype), v.astype(cfg.compute_dtype)
+    return cache["k"], cache["v"]
+
+
+def attention_prefill(
+    p, x, cfg: ArchConfig, rules: ShardingRules, is_global, cache, kv_chunk=1024
+):
+    """Prefill: full-seq attention + fill cache positions [0, S)."""
+    positions = jnp.arange(x.shape[1])
+    q, k, v = _qkv(p, x, cfg, rules)
+    q = _rope_dual(q, positions, cfg, is_global)
+    k_r = _rope_dual(k, positions, cfg, is_global)
+    if cfg.global_interval is None:
+        out = _masked_attention(q, k_r, v, cfg, is_global, 0, kv_chunk=kv_chunk)
+    else:
+        out = _masked_attention(q, k_r, v, cfg, is_global, 0)
+    cache = _store_kv(cache, k_r, v, 0, cfg, rules)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cfg.compute_dtype))
+    return constrain(out, rules, ("act_batch", "seq", "d_model")), cache
+
+
+def attention_decode(
+    p, x, cfg: ArchConfig, rules: ShardingRules, is_global, cache, pos
+):
+    """Decode/extend against the sequence-sharded cache.
+
+    x (B,C,D) — C=1 for decode, C=chunk for chunked prefill (extend).  The
+    (B,H,C,S) score reduction over the 'cache_seq'-sharded axis is the
+    flash-decoding collective; per-chunk memory is C·S per head group.
+    """
+    c = x.shape[1]
+    positions = pos + jnp.arange(c)
+    q, k_new, v_new = _qkv(p, x, cfg, rules)
+    q = _rope_dual(q, positions, cfg, is_global)
+    k_new = _rope_dual(k_new, positions, cfg, is_global)
+    cache = _store_kv(cache, k_new, v_new, pos, cfg, rules)
+    k, v = _read_kv(cache, cfg)
+
+    b, _, h, hd = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, c, kvh, rep, hd).astype(jnp.float32) * scale
+    sc = jnp.einsum("bcgrd,bsgd->bgrcs", qg, k.astype(jnp.float32))
+    kpos = jnp.arange(k.shape[1])[None, :]                  # (1, S)
+    qpos = (pos + jnp.arange(c))[:, None]                   # (C, 1)
+    mask = kpos <= qpos
+    if cfg.window is not None:
+        # window off on traced-global layers (gemma3 1-in-6, hymba's 3)
+        win = (qpos - kpos) < cfg.window
+        win = win | jnp.asarray(is_global, bool)
+        mask = mask & win
+    sc = jnp.where(mask[None, None, None], sc, -1e30)
+    w = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bgrcs,bsgd->bcgrd", w, v.astype(jnp.float32))
+    out = out.reshape(b, c, h, hd).astype(cfg.compute_dtype)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cfg.compute_dtype))
+    return constrain(out, rules, ("act_batch", "seq", "d_model")), cache

@@ -1,0 +1,293 @@
+"""Shared model machinery: params-with-named-dims, norms, RoPE, chunked ops.
+
+Parameters are declared once as :class:`Param` (shape + *logical dim names* +
+init); the same declaration yields both the initialized arrays and the
+``PartitionSpec`` tree (see :mod:`repro.parallel.sharding`), so sharding can
+never drift from the parameter structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    """A parameter declaration: shape, logical dim names, initializer."""
+
+    shape: Tuple[int, ...]
+    dims: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | embed
+    scale: Optional[float] = None  # stddev override (default: fan-in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.dims), (self.shape, self.dims)
+
+
+def init_params(defs: Pytree, key: jax.Array, dtype=jnp.float32) -> Pytree:
+    """Materialize a Param-def tree into arrays (deterministic per-leaf keys)."""
+    leaves, treedef = jax.tree_util.tree_flatten(
+        defs, is_leaf=lambda x: isinstance(x, Param)
+    )
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for p, k in zip(leaves, keys):
+        if p.init == "zeros":
+            out.append(jnp.zeros(p.shape, dtype))
+        elif p.init == "ones":
+            out.append(jnp.ones(p.shape, dtype))
+        else:
+            if p.scale is not None:
+                std = p.scale
+            elif p.init == "embed":
+                # 1/sqrt(d_model): keeps tied-head logits O(1).
+                std = 1.0 / math.sqrt(p.shape[-1])
+            else:
+                fan_in = p.shape[0] if len(p.shape) == 1 else int(np.prod(p.shape[:-1]))
+                std = 1.0 / math.sqrt(max(fan_in, 1))
+            out.append(jax.random.normal(k, p.shape, dtype) * std)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def map_params(fn: Callable[[Param], Any], defs: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(
+        fn, defs, is_leaf=lambda x: isinstance(x, Param)
+    )
+
+
+def stack_layer_defs(defs: Pytree, n_layers: int) -> Pytree:
+    """Prepend a 'layers' dim to every Param (for lax.scan-stacked layers)."""
+    return map_params(
+        lambda p: Param((n_layers,) + p.shape, ("layers",) + p.dims, p.init, p.scale),
+        defs,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Norms & activations
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    # Square in x.dtype, accumulate the sum in f32 (reduce-with-f32-accum
+    # reads x natively).  Materializing x.astype(f32) instead makes XLA stage
+    # a full f32 copy of the (L,B,S,D) remat residual stack ahead of the
+    # backward loop (+7.7 GB/device on arctic-480b).  bf16 squares cost ~3
+    # mantissa bits on the variance — standard practice (bf16 layernorms).
+    var = (
+        jnp.sum(jnp.square(x), axis=-1, keepdims=True, dtype=jnp.float32)
+        / x.shape[-1]
+    )
+    scale = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * scale * (1.0 + gamma.astype(x.dtype))
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps=1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps) * gamma + beta).astype(x.dtype)
+
+
+ACTIVATIONS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+}
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (..., S, H, hd); positions (..., S) or (S,)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]                            # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) attention in pure jnp — differentiable, O(chunk) mem.
+# ---------------------------------------------------------------------------
+
+
+def chunked_mha(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    kv_chunk: int = 1024,
+    scale: Optional[float] = None,
+    window_flag: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Online-softmax attention scanned over KV chunks (GQA-aware, no repeat).
+
+    q (B,S,H,hd); k,v (B,Skv,KVH,hd).  Memory high-water: one (B,S,chunk)
+    score block per KV head group — the jnp analogue of the flash kernel, and
+    the differentiable training path.
+
+    ``window_flag``: traced bool disabling the window when True (gemma3-style
+    mixed local/global stacks compile one body for both layer kinds).
+    """
+    b, s, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    rep = h // kvh
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    kv_chunk = min(kv_chunk, skv)
+    assert skv % kv_chunk == 0
+    n_chunks = skv // kv_chunk
+
+    qg = q.reshape(b, s, kvh, rep, hd).astype(jnp.float32) * scale
+    kc = k.reshape(b, n_chunks, kv_chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, kv_chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
+
+    q_pos = q_offset + jnp.arange(s)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kb, vb, c = xs
+        kb = kb.astype(jnp.float32)
+        # scores: (B, S, KVH, rep, chunk)
+        sc = jnp.einsum("bsgrd,bcgd->bsgrc", qg, kb)
+        kpos = c * kv_chunk + jnp.arange(kv_chunk)
+        mask = jnp.ones((s, kv_chunk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= kpos[None, :]
+        if window is not None:
+            win = q_pos[:, None] - kpos[None, :] < window
+            if window_flag is not None:
+                win = win | jnp.asarray(window_flag, bool)
+            mask &= win
+        sc = jnp.where(mask[None, :, None, None, :], sc, -1e30)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        p = jnp.where(mask[None, :, None, None, :], p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bsgrc,bcgd->bsgrd", p, vb.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, s, kvh, rep), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, s, kvh, rep), jnp.float32)
+    a0 = jnp.zeros((b, s, kvh, rep, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks))
+    )
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l[..., None]).reshape(b, s, h, hd)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked decayed linear recurrence: h_t = a_t * h_{t-1} + b_t  (elementwise)
+# Shared by RWKV6 (Finch) and the Mamba/S6 heads.
+# ---------------------------------------------------------------------------
+
+
+def decayed_cumsum(
+    a: jax.Array, b: jax.Array, h0: jax.Array, chunk: int = 64
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (h for every step (T, ...), final h).  a,b: (T, ...); h0 (...)."""
+    t = a.shape[0]
+    chunk = min(chunk, t)
+    assert t % chunk == 0
+    n = t // chunk
+    a_c = a.reshape((n, chunk) + a.shape[1:])
+    b_c = b.reshape((n, chunk) + b.shape[1:])
+
+    def combine(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, bx * ay + by
+
+    def step(h, ab):
+        ac, bc = ab
+        aa, bb = jax.lax.associative_scan(combine, (ac, bc), axis=0)
+        hs = aa * h + bb
+        return hs[-1], hs
+
+    h_last, hs = jax.lax.scan(step, h0, (a_c, b_c))
+    return hs.reshape((t,) + a.shape[1:]), h_last
+
+
+# ---------------------------------------------------------------------------
+# Chunked softmax cross-entropy (vocab-sharded logits, seq-chunked memory)
+# ---------------------------------------------------------------------------
+
+
+def chunked_softmax_xent(
+    x: jax.Array,
+    w_out: jax.Array,
+    labels: jax.Array,
+    mask: Optional[jax.Array] = None,
+    seq_chunk: int = 512,
+    n_valid: Optional[int] = None,
+    logit_spec=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Mean CE of ``softmax(x @ w_out)`` vs labels, scanning over seq chunks.
+
+    x (B,S,D); w_out (D,V); labels (B,S).  Never materializes (B,S,V) — only
+    (B,chunk,V) — which is what keeps 32k-seq training steps in memory.
+    ``n_valid``: real vocab size when V is TP-padded (padded classes masked).
+    Returns (loss, total_weight).
+    """
+    b, s, d = x.shape
+    v = w_out.shape[1]
+    pad_mask = None
+    if n_valid is not None and n_valid < v:
+        pad_mask = (jnp.arange(v) < n_valid)[None, None, :]
+    seq_chunk = min(seq_chunk, s)
+    assert s % seq_chunk == 0
+    n = s // seq_chunk
+    xs = x.reshape(b, n, seq_chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, n, seq_chunk).transpose(1, 0, 2)
+    ms = (
+        mask.reshape(b, n, seq_chunk).transpose(1, 0, 2)
+        if mask is not None
+        else jnp.ones((n, b, seq_chunk), x.dtype)
+    )
+
+    def step(carry, xs_):
+        tot, cnt = carry
+        xc, lc, mc = xs_
+        logits = (xc @ w_out).astype(jnp.float32)
+        if logit_spec is not None:
+            try:
+                logits = jax.lax.with_sharding_constraint(logits, logit_spec)
+            except (ValueError, RuntimeError):
+                pass
+        if pad_mask is not None:
+            logits = jnp.where(pad_mask, logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mc
+        return (tot + jnp.sum(nll), cnt + jnp.sum(mc)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        step, (jnp.float32(0.0), jnp.float32(0.0)), (xs, ls, ms)
+    )
+    return tot / jnp.maximum(cnt, 1.0), cnt

@@ -1,0 +1,169 @@
+"""Selective SSM (S6/Mamba) head and the Hymba parallel attn+SSM block.
+
+The selective scan  h_t = exp(Δ_t ⊙ A) h_{t-1} + Δ_t B_t x_t,  y_t = C_t·h_t
+runs through the same chunked decayed-cumsum helper as RWKV: exact and
+O(chunk·d_inner·N) memory.  All per-token projections (Δ, B, C) are computed
+*inside* the chunk scan so the (T, d_inner, N) tensors never materialize —
+required for the 500k-token shapes.
+
+Hymba block: attention heads and a Mamba head run *in parallel* on the same
+normed input; each path is output-normed then averaged (arXiv:2411.13676).
+Meta-tokens from the paper are out of scope (noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.parallel.sharding import ShardingRules, constrain
+from .common import Param, decayed_cumsum, rms_norm
+from .attention import attention_defs, attention_fwd, attention_decode, attention_prefill
+
+
+def mamba_dims(cfg: ArchConfig) -> Tuple[int, int, int]:
+    d_inner = 2 * cfg.d_model
+    dt_rank = max(1, math.ceil(cfg.d_model / 16))
+    return d_inner, dt_rank, cfg.ssm_state
+
+
+def mamba_defs(cfg: ArchConfig) -> Dict[str, Param]:
+    d = cfg.d_model
+    di, r, n = mamba_dims(cfg)
+    k = cfg.ssm_conv
+    return {
+        "w_in": Param((d, 2 * di), ("fsdp", "d_ff")),
+        "conv_w": Param((k, di), (None, "d_ff"), scale=0.1),
+        "conv_b": Param((di,), ("d_ff",), init="zeros"),
+        "w_x": Param((di, r + 2 * n), ("d_ff", None)),
+        "w_dt": Param((r, di), (None, "d_ff")),
+        "b_dt": Param((di,), ("d_ff",), init="zeros"),
+        "a_log": Param((di, n), ("d_ff", "ssm_state"), init="ones"),
+        "d_skip": Param((di,), ("d_ff",), init="ones"),
+        "w_out": Param((di, d), ("d_ff", "fsdp")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: Optional[jax.Array] = None):
+    """Depthwise causal conv over time. x (B,T,di); w (K,di); tail (B,K-1,di)."""
+    k = w.shape[0]
+    if tail is None:
+        pad = jnp.zeros_like(x[:, : k - 1])
+    else:
+        pad = tail
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(k))
+    new_tail = xp[:, -(k - 1):] if k > 1 else None
+    return out + b, new_tail
+
+
+def mamba_fwd(
+    p, x, cfg: ArchConfig, rules: ShardingRules,
+    state: Optional[Dict[str, jax.Array]] = None,
+    chunk: int = 16,
+):
+    """x (B,T,D) → (y (B,T,D), new_state). state carries {'h', 'conv'}."""
+    dt_ = cfg.compute_dtype
+    b, t, d = x.shape
+    di, r, n = mamba_dims(cfg)
+    xz = x @ p["w_in"].astype(dt_)
+    xm, z = jnp.split(xz, 2, axis=-1)
+    xm = constrain(xm, rules, ("act_batch", "seq", "d_ff"))
+    tail = None if state is None else state["conv"]
+    xm, new_tail = _causal_conv(xm, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_), tail)
+    xm = jax.nn.silu(xm)
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))         # (di, N)
+    h0 = (
+        jnp.zeros((b, di, n), jnp.float32) if state is None else state["h"]
+    )
+    chunk = min(chunk, t)
+    assert t % chunk == 0
+    n_chunks = t // chunk
+    xc = xm.reshape(b, n_chunks, chunk, di).transpose(1, 2, 0, 3)  # (n,C,B,di)
+
+    wx = p["w_x"].astype(dt_)
+    wdt = p["w_dt"].astype(dt_)
+    bdt = p["b_dt"].astype(jnp.float32)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def step(h, xcc):
+        proj = xcc @ wx                                    # (C,B,r+2N)
+        dt_r, bm, cm = jnp.split(proj, [r, r + n], axis=-1)
+        delta = jax.nn.softplus((dt_r @ wdt).astype(jnp.float32) + bdt)  # (C,B,di)
+        da = jnp.exp(delta[..., None] * a)                 # (C,B,di,N)
+        db = (delta * xcc.astype(jnp.float32))[..., None] * bm.astype(jnp.float32)[:, :, None, :]
+        hs, h_new = decayed_cumsum(da, db, h, chunk=da.shape[0])
+        y = jnp.einsum("cbdn,cbn->cbd", hs, cm.astype(jnp.float32))
+        return h_new, y
+
+    h_final, ys = jax.lax.scan(step, h0, xc)
+    y = ys.transpose(2, 0, 1, 3).reshape(b, t, di).astype(dt_)
+    y = y + p["d_skip"].astype(dt_) * xm
+    y = y * jax.nn.silu(z)
+    out = y @ p["w_out"].astype(dt_)
+    new_state = {"h": h_final, "conv": new_tail}
+    return constrain(out, rules, ("act_batch", "seq", "d_model")), new_state
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int) -> Dict[str, jax.Array]:
+    di, _, n = mamba_dims(cfg)
+    return {
+        "h": jnp.zeros((batch, di, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), cfg.compute_dtype),
+    }
+
+
+def mamba_state_dims(cfg: ArchConfig):
+    return {
+        "h": ("cache_batch", "d_ff", "ssm_state"),
+        "conv": ("cache_batch", None, "d_ff"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Hymba parallel hybrid block
+# ---------------------------------------------------------------------------
+
+
+def hymba_defs(cfg: ArchConfig, q_heads: int, kv_heads: int) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {
+        "attn": attention_defs(cfg, q_heads, kv_heads),
+        "mamba": mamba_defs(cfg),
+        "norm_attn": Param((d,), ("d_model",), init="zeros"),
+        "norm_mamba": Param((d,), ("d_model",), init="zeros"),
+    }
+
+
+def hymba_mix(p, attn_out, mamba_out, cfg: ArchConfig):
+    """Per-path output norm, then average (Hymba §3.1)."""
+    a = rms_norm(attn_out, p["norm_attn"])
+    m = rms_norm(mamba_out, p["norm_mamba"])
+    return 0.5 * (a + m)
+
+
+def hymba_block_fwd(
+    p, x, cfg: ArchConfig, rules: ShardingRules, is_global, positions
+):
+    """Train/no-cache path."""
+    attn_out = attention_fwd(p["attn"], x, cfg, rules, is_global, positions)
+    mamba_out, _ = mamba_fwd(p["mamba"], x, cfg, rules)
+    return hymba_mix(p, attn_out, mamba_out, cfg)
+
+
+def hymba_block_prefill(p, x, cfg, rules, is_global, cache):
+    attn_out, kv = attention_prefill(p["attn"], x, cfg, rules, is_global, cache["kv"])
+    mamba_out, ssm = mamba_fwd(p["mamba"], x, cfg, rules)
+    return hymba_mix(p, attn_out, mamba_out, cfg), {"kv": kv, "ssm": ssm}
+
+
+def hymba_block_decode(p, x, cfg, rules, is_global, cache, pos):
+    attn_out, kv = attention_decode(p["attn"], x, cfg, rules, is_global, cache["kv"], pos)
+    mamba_out, ssm = mamba_fwd(p["mamba"], x, cfg, rules, state=cache["ssm"])
+    return hymba_mix(p, attn_out, mamba_out, cfg), {"kv": kv, "ssm": ssm}

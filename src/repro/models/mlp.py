@@ -1,0 +1,222 @@
+"""Dense MLP and Mixture-of-Experts layers.
+
+The MoE layer is the framework's flagship packed-stream consumer: token
+dispatch is an *indirect write* into expert-contiguous buffers and combine is
+an *indirect read* back (repro.kernels.ops.moe_dispatch/combine).  Training
+uses the differentiable ref path (XLA scatter/gather — same stream
+semantics); serving can route through the Pallas converters.
+
+Sharding: experts over the 'model' axis (EP), dispatch buffers' capacity dim
+over 'data', so the dispatch lowers to the canonical MoE all-to-all.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.parallel.sharding import ShardingRules, constrain
+from .common import ACTIVATIONS, Param
+
+
+# ---------------------------------------------------------------------------
+# Dense (gated) MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_defs(cfg: ArchConfig, d_ff: Optional[int] = None) -> Dict[str, Param]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    defs = {
+        "w_up": Param((d, f), ("fsdp_mlp", "d_ff")),
+        "w_down": Param((f, d), ("d_ff", "fsdp_mlp")),
+    }
+    if cfg.glu:
+        defs["w_gate"] = Param((d, f), ("fsdp_mlp", "d_ff"))
+    return defs
+
+
+def _w(leaf, dt):
+    """Weight read: plain array, or w8a16 {'q': int8, 'scale': per-channel}.
+
+    Int8 weights are the serving-side narrow-element packing (§III-E):
+    half the HBM stream per matmul and half the resident bytes; dequant
+    happens at VMEM/register level.
+    """
+    if isinstance(leaf, dict) and "q" in leaf:
+        return leaf["q"].astype(dt) * leaf["scale"].astype(dt)
+    return leaf.astype(dt)
+
+
+def mlp_fwd(p, x, cfg: ArchConfig, rules: ShardingRules) -> jax.Array:
+    dt = cfg.compute_dtype
+    act = ACTIVATIONS[cfg.activation]
+    up = x @ _w(p["w_up"], dt)
+    up = constrain(up, rules, ("act_batch", "seq", "d_ff"))
+    h = act(up) * (x @ _w(p["w_gate"], dt)) if cfg.glu else act(up)
+    out = h @ _w(p["w_down"], dt)
+    return constrain(out, rules, ("act_batch", "seq", "d_model"))
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+
+def moe_defs(cfg: ArchConfig) -> Dict[str, Param]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    defs = {
+        "router": Param((d, e), ("d_model", None), scale=0.02),
+        "w_up": Param((e, d, f), ("experts", "fsdp_mlp", None)),
+        "w_down": Param((e, f, d), ("experts", None, "fsdp_mlp")),
+    }
+    if cfg.glu:
+        defs["w_gate"] = Param((e, d, f), ("experts", "fsdp_mlp", None))
+    if cfg.dense_residual:
+        defs["dense"] = mlp_defs(cfg)
+    return defs
+
+
+def moe_capacity(cfg: ArchConfig, n_tokens: int) -> int:
+    cap = math.ceil(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-cap // 8) * 8)  # round up to 8 (pack granularity)
+
+
+def _expert_ffn(p, buf, cfg: ArchConfig):
+    dt = cfg.compute_dtype
+    act = ACTIVATIONS[cfg.activation]
+    up = jnp.einsum("ecd,edf->ecf", buf, _w(p["w_up"], dt))
+    if cfg.glu:
+        h = act(up) * jnp.einsum("ecd,edf->ecf", buf, _w(p["w_gate"], dt))
+    else:
+        h = act(up)
+    return jnp.einsum("ecf,efd->ecd", h, _w(p["w_down"], dt))
+
+
+def _router(p, flat, cfg: ArchConfig):
+    logits = (flat @ p["router"].astype(cfg.compute_dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, cfg.top_k)               # (T,K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux: E * Σ_e fraction_e * mean_prob_e.
+    frac = jnp.mean(
+        jax.nn.one_hot(idx, cfg.n_experts, dtype=jnp.float32).sum(1), axis=0
+    ) / cfg.top_k
+    aux = cfg.n_experts * jnp.sum(frac * jnp.mean(probs, axis=0))
+    return gate, idx, aux
+
+
+def moe_fwd(
+    p, x, cfg: ArchConfig, rules: ShardingRules, impl: str = "ref"
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,D), aux load-balance loss).
+
+    Two lowerings:
+    * **EP shard_map path** (mesh present, experts on 'model'): activations
+      are replicated across the model axis between blocks, so each device
+      packs its local tokens for *its own* expert shard entirely locally —
+      near-memory packing, no token movement — and the combine is one
+      bf16 (T,D) psum.  The SPMD-partitioned scatter path instead emitted
+      full dispatch-buffer all-reduces (observed 1.2 TB/device/step on
+      olmoe train — EXPERIMENTS.md §Perf).
+    * fallback (no mesh / unsharded experts): the portable scatter/gather
+      path via repro.kernels.
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    flat = x.reshape(t, d)
+    ep = rules.axis("experts")
+    n_ep = rules.axis_size("experts")
+
+    if rules.mesh is not None and isinstance(ep, str) and n_ep > 1:
+        out, aux = _ep_moe_fwd(p, flat, cfg, rules, ep, n_ep)
+        out = out.reshape(b, s, d)
+    else:
+        gate, idx, aux = _router(p, flat, cfg)
+        cap = moe_capacity(cfg, t)
+        buf, src, keep = kops.moe_dispatch(flat, idx, e, cap, impl=impl)
+        buf = constrain(buf, rules, ("experts", "capacity", None))
+        out_buf = _expert_ffn(p, buf, cfg)
+        out_buf = constrain(out_buf, rules, ("experts", "capacity", None))
+        out = kops.moe_combine(out_buf, src, gate * keep, t, impl=impl)
+        out = out.reshape(b, s, d)
+
+    if cfg.dense_residual:
+        out = out + mlp_fwd(p["dense"], x, cfg, rules)
+    return constrain(out, rules, ("act_batch", "seq", "d_model")), aux
+
+
+def _ep_moe_fwd(p, flat, cfg: ArchConfig, rules: ShardingRules, ep: str, n_ep: int):
+    """Expert-parallel MoE via shard_map (manual over the experts axis).
+
+    Per model shard: route (identical math on every shard), select the
+    assignments that hit the shard's E/n experts, pack them locally
+    (capacity per expert per data-shard), run the local expert FFN, combine
+    locally gate-weighted, and psum partial outputs across shards.
+    Everything but the final (T_local, D) psum is device-local.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    e_loc = cfg.n_experts // n_ep
+    t = flat.shape[0]
+    # Capacity per (expert, data shard): same expected load as the global
+    # formula over the data-sharded token count.
+    t_shard = max(1, t // max(1, rules.axis_size("batch")))
+    cap = moe_capacity(cfg, t_shard)
+    dt = cfg.compute_dtype
+    psum_dt = jnp.float32 if jax.default_backend() == "cpu" else dt
+
+    def local(router_w, w_up, w_gate, w_down, tokens):
+        # Boundary values arrive in psum_dt: replicated-input cotangents are
+        # psummed over the manual axis in this dtype (XLA:CPU cannot lower
+        # bf16 all-reduce; TPU runs this in bf16).
+        tokens = tokens.astype(dt)
+        m = jax.lax.axis_index(ep)
+        gate, idx, aux = _router({"router": router_w}, tokens, cfg)
+        local_idx = idx - m * e_loc
+        ok = (local_idx >= 0) & (local_idx < e_loc)
+        # non-local assignments route to the overflow expert e_loc (dropped)
+        masked = jnp.where(ok, local_idx, e_loc)
+        buf, src, keep = kref.moe_dispatch(tokens, masked, e_loc + 1, cap)
+        out_buf = _expert_ffn(
+            {"w_up": w_up, "w_gate": w_gate, "w_down": w_down},
+            buf[:e_loc], cfg,
+        )
+        out_buf = jnp.concatenate(
+            [out_buf, jnp.zeros((1,) + out_buf.shape[1:], out_buf.dtype)]
+        )
+        partial = kref.moe_combine(
+            out_buf, src, (gate * keep * ok).astype(jnp.float32),
+            tokens.shape[0],
+        )
+        out = jax.lax.psum(partial.astype(psum_dt), ep).astype(dt)
+        # aux is identical on every shard (router math is replicated)
+        return out, aux
+
+    w_gate = p.get("w_gate")
+
+    def wspec(w):  # dict for w8a16 {'q','scale'}, bare spec otherwise
+        return jax.tree_util.tree_map(lambda _: P(ep, None, None), w)
+
+    in_specs = (
+        P(),                    # router: replicated over model
+        wspec(p["w_up"]),       # expert weights: experts on the manual axis
+        wspec(w_gate) if w_gate is not None else P(),
+        wspec(p["w_down"]),
+        P(),                    # tokens: replicated over model (auto on data)
+    )
+    mapped = jax.shard_map(
+        local, mesh=rules.mesh,
+        in_specs=in_specs,
+        out_specs=(P(), P()),
+        axis_names={ep}, check_vma=False,
+    )
+    return mapped(
+        p["router"].astype(psum_dt), p["w_up"], w_gate, p["w_down"],
+        flat.astype(psum_dt),
+    )

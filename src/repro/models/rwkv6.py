@@ -1,0 +1,225 @@
+"""RWKV6 "Finch" block: data-dependent-decay time mix + channel mix.
+
+The WKV recurrence  S_t = diag(w_t) S_{t-1} + k_t vᵀ_t,
+                    y_t = r_t·(S_{t-1} + diag(u) k_t vᵀ_t)
+is evaluated with the chunked decayed-cumsum helper: exact, differentiable,
+O(chunk·H·hd²) live memory — the recurrent state never materializes for the
+whole sequence.  Decode is a single state update (attention-free: this arch
+is the long_500k-capable pure-SSM assignee; packed streams only touch its
+embedding/LM-head gathers — see DESIGN.md §Arch-applicability).
+
+TP: time-mix projections are head-shaped (d → H×64) and shard over 'model'
+like attention heads (padded 40→48 under TP-16, recorded in the config).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.parallel.sharding import ShardingRules, constrain
+from .common import Param, decayed_cumsum, rms_norm
+
+LORA_R = 32
+HEAD_DIM = 64
+MIX_NAMES = ("r", "w", "k", "v", "g")
+
+
+def rwkv_heads(cfg: ArchConfig, padded: bool = False) -> int:
+    if padded and cfg.tp_pad_heads:
+        return cfg.tp_pad_heads
+    return cfg.d_model // HEAD_DIM
+
+
+def rwkv_defs(cfg: ArchConfig, heads: Optional[int] = None) -> Dict[str, Any]:
+    d, f = cfg.d_model, cfg.d_ff
+    h = heads or rwkv_heads(cfg)
+    tm = {
+        "mu_x": Param((d,), ("d_model",), init="zeros"),
+        "mu": Param((5, d), (None, "d_model"), init="zeros"),
+        "lora_a": Param((5, d, LORA_R), (None, "d_model", None), scale=0.01),
+        "lora_b": Param((5, LORA_R, d), (None, None, "d_model"), scale=0.01),
+        "w_base": Param((h, HEAD_DIM), ("heads", "head_dim"), init="zeros"),
+        "wa": Param((d, LORA_R * 2), ("d_model", None), scale=0.01),
+        "wb": Param((LORA_R * 2, h, HEAD_DIM), (None, "heads", "head_dim"), scale=0.01),
+        "u": Param((h, HEAD_DIM), ("heads", "head_dim"), init="zeros"),
+        "wr": Param((d, h, HEAD_DIM), ("fsdp", "heads", "head_dim")),
+        "wk": Param((d, h, HEAD_DIM), ("fsdp", "heads", "head_dim")),
+        "wv": Param((d, h, HEAD_DIM), ("fsdp", "heads", "head_dim")),
+        "wg": Param((d, h, HEAD_DIM), ("fsdp", "heads", "head_dim")),
+        "wo": Param((h, HEAD_DIM, d), ("heads", "head_dim", "fsdp")),
+        "ln_g": Param((h, HEAD_DIM), ("heads", "head_dim"), init="zeros"),
+    }
+    cm = {
+        "mu_k": Param((d,), ("d_model",), init="zeros"),
+        "mu_r": Param((d,), ("d_model",), init="zeros"),
+        "wk": Param((d, f), ("fsdp", "d_ff")),
+        "wv": Param((f, d), ("d_ff", "fsdp")),
+        # receptance gate output dim shards over the model axis ('heads'):
+        # replicated it costs d² per layer in params+grads+moments.
+        "wr": Param((d, d), ("fsdp", "heads")),
+    }
+    return {"tm": tm, "cm": cm}
+
+
+def _shift(x: jax.Array, x_last: Optional[jax.Array]) -> jax.Array:
+    """Token shift: previous token's activation (zeros / carried at t=0)."""
+    prev = jnp.zeros_like(x[:, :1]) if x_last is None else x_last[:, None]
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def wkv6(
+    r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+    u: jax.Array, s0: jax.Array, chunk: int = 32,
+) -> Tuple[jax.Array, jax.Array]:
+    """r,k,v,w: (B,T,H,hd); u: (H,hd); s0: (B,H,hd,hd) → (y, s_final).
+
+    The chunk step is rematerialized (jax.checkpoint): backward keeps only
+    the per-chunk state carry (B·H·hd² f32) and recomputes the chunk-local
+    (C,B,H,hd,hd) tensors — without this, training a 4k sequence would
+    retain ~T/C × C·B·H·hd² bytes of scan residuals (observed 62 GB/device
+    on the rwkv6-3b dry-run; 3.4 GB after — EXPERIMENTS.md §Perf).
+    """
+    b, t, h, hd = r.shape
+    chunk = min(chunk, t)
+    assert t % chunk == 0
+    n = t // chunk
+
+    def to_chunks(x):
+        return x.reshape(b, n, chunk, h, hd).transpose(1, 2, 0, 3, 4)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))  # (n, C, B, H, hd)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def step(s, xs):
+        rcc, kcc, vcc, wcc = (x.astype(jnp.float32) for x in xs)
+        a = jnp.broadcast_to(wcc[..., None], wcc.shape + (hd,))
+        bb = kcc[..., None] * vcc[..., None, :]
+        hs, s_new = decayed_cumsum(a, bb, s, chunk=a.shape[0])
+        s_prev = jnp.concatenate([s[None], hs[:-1]], axis=0)
+        y = jnp.einsum("cbhk,cbhkv->cbhv", rcc, s_prev)
+        bonus = jnp.einsum("cbhk,hk,cbhk->cbh", rcc, u.astype(jnp.float32), kcc)
+        y = y + bonus[..., None] * vcc
+        return s_new, y
+
+    s_final, ys = jax.lax.scan(step, s0.astype(jnp.float32), (rc, kc, vc, wc))
+    y = ys.transpose(2, 0, 1, 3, 4).reshape(b, t, h, hd)
+    return y.astype(r.dtype), s_final
+
+
+def _ddlerp(p, x, sx):
+    """Data-dependent lerp producing the five mixed inputs (r,w,k,v,g).
+
+    Computed per-name (not as one stacked (5,B,T,D) einsum): the stacked form
+    made the backward materialize 5×(B·T,D) f32 cotangents at once (~15 GB on
+    the rwkv6-3b train_4k dry-run).
+    """
+    xxx = x + sx * p["mu_x"]
+    out = {}
+    for i, name in enumerate(MIX_NAMES):
+        lora = jnp.tanh(xxx @ p["lora_a"][i]) @ p["lora_b"][i]
+        out[name] = x + sx * (p["mu"][i] + lora)
+    return out
+
+
+def time_mix(
+    p, x, cfg: ArchConfig, rules: ShardingRules,
+    state: Optional[Dict[str, jax.Array]] = None,
+):
+    """state: {'s': (B,H,hd,hd), 'x_tm': (B,D)} for decode; None for train."""
+    dt = cfg.compute_dtype
+    b, t, d = x.shape
+    h = p["u"].shape[0]
+    x_last = None if state is None else state["x_tm"]
+    sx = _shift(x, x_last) - x
+    pf = {k_: v_.astype(dt) for k_, v_ in p.items()}
+    mixed = _ddlerp(pf, x, sx)
+
+    r = jnp.einsum("bsd,dhk->bshk", mixed["r"], pf["wr"])
+    k = jnp.einsum("bsd,dhk->bshk", mixed["k"], pf["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", mixed["v"], pf["wv"])
+    g = jax.nn.silu(jnp.einsum("bsd,dhk->bshk", mixed["g"], pf["wg"]))
+    for name, arr in (("r", r), ("k", k), ("v", v)):
+        constrain(arr, rules, ("act_batch", "seq", "heads", "head_dim"))
+    w_log = p["w_base"].astype(jnp.float32) + jnp.einsum(
+        "bsd,dr,rhk->bshk",
+        mixed["w"].astype(jnp.float32),
+        jnp.tanh(p["wa"].astype(jnp.float32)),
+        p["wb"].astype(jnp.float32),
+    )
+    w = jnp.exp(-jnp.exp(w_log))
+
+    s0 = (
+        jnp.zeros((b, h, HEAD_DIM, HEAD_DIM), jnp.float32)
+        if state is None
+        else state["s"]
+    )
+    y, s_new = wkv6(r, k, v, w.astype(r.dtype), p["u"], s0)
+
+    # per-head group norm
+    mu = jnp.mean(y.astype(jnp.float32), axis=-1, keepdims=True)
+    var = jnp.var(y.astype(jnp.float32), axis=-1, keepdims=True)
+    y = ((y - mu) * jax.lax.rsqrt(var + 1e-5)).astype(dt)
+    y = y * (1.0 + pf["ln_g"]) * g
+    out = jnp.einsum("bshk,hkd->bsd", y, pf["wo"])
+    new_state = {"s": s_new, "x_tm": x[:, -1]}
+    return constrain(out, rules, ("act_batch", "seq", "d_model")), new_state
+
+
+def channel_mix(
+    p, x, cfg: ArchConfig, rules: ShardingRules,
+    state: Optional[Dict[str, jax.Array]] = None,
+):
+    dt = cfg.compute_dtype
+    x_last = None if state is None else state["x_cm"]
+    sx = _shift(x, x_last) - x
+    xk = x + sx * p["mu_k"].astype(dt)
+    xr = x + sx * p["mu_r"].astype(dt)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"].astype(dt)))
+    k = constrain(k, rules, ("act_batch", "seq", "d_ff"))
+    v = k @ p["wv"].astype(dt)
+    r = jax.nn.sigmoid(xr @ p["wr"].astype(dt))
+    out = r * v
+    return (
+        constrain(out, rules, ("act_batch", "seq", "d_model")),
+        {"x_cm": x[:, -1]},
+    )
+
+
+def rwkv_block(
+    p, x, cfg: ArchConfig, rules: ShardingRules, norms,
+    state: Optional[Dict[str, jax.Array]] = None,
+):
+    """One RWKV layer: x + TM(norm(x)); x + CM(norm(x)). Returns (x, state)."""
+    tm_out, st_tm = time_mix(
+        p["tm"], rms_norm(x, norms["ln1"]), cfg, rules, state
+    )
+    x = x + tm_out
+    cm_out, st_cm = channel_mix(
+        p["cm"], rms_norm(x, norms["ln2"]), cfg, rules, state
+    )
+    x = x + cm_out
+    return x, {**st_tm, **st_cm}
+
+
+def init_rwkv_state(
+    cfg: ArchConfig, batch: int, heads: Optional[int] = None
+) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    h = heads or rwkv_heads(cfg)
+    return {
+        "s": jnp.zeros((batch, h, HEAD_DIM, HEAD_DIM), jnp.float32),
+        "x_tm": jnp.zeros((batch, d), cfg.compute_dtype),
+        "x_cm": jnp.zeros((batch, d), cfg.compute_dtype),
+    }
+
+
+def rwkv_state_dims(cfg: ArchConfig):
+    return {
+        "s": ("cache_batch", "heads", None, None),
+        "x_tm": ("cache_batch", None),
+        "x_cm": ("cache_batch", None),
+    }

@@ -1,0 +1,3 @@
+"""Optimizers (AdamW/Adafactor) + int8 error-feedback gradient compression."""
+from .optimizers import OptimizerConfig, make_optimizer, clip_by_global_norm, global_norm
+from . import compression

@@ -1,0 +1,212 @@
+"""Optimizers: AdamW and Adafactor, with configurable state dtypes.
+
+Pure-functional: ``init(params) → state``, ``update(grads, state, params,
+step) → (new_params, new_state)``.  State pytrees mirror the parameter tree,
+so the sharding specs derived for params apply leaf-wise to optimizer state
+(ZeRO-style: with ``cfg.fsdp`` params — and hence states — are sharded over
+data × model).
+
+Adafactor (factored second moment, bf16 first moment) is what makes the
+480B config fit: AdamW fp32 states for 480B ≈ 5.8 TB > a 256-chip pod's
+4 TB HBM, while factored states are ~1 TB (see configs/arctic_480b.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree_util.tree_leaves(tree))
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, tree), norm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"     # bfloat16 halves AdamW m/v bytes
+    factored_threshold: int = 128     # adafactor: factor dims ≥ this
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
+    if cfg.name == "adamw":
+        return _adamw(cfg)
+    if cfg.name == "adafactor":
+        return _adafactor(cfg)
+    raise ValueError(f"unknown optimizer {cfg.name}")
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def _adamw(cfg: OptimizerConfig) -> Optimizer:
+    mdt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.moment_dtype]
+    lr_fn = cosine_schedule(cfg.lr, cfg.warmup_steps, cfg.total_steps)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=mdt)
+        return {
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+        }
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        lr = lr_fn(step)
+        c1 = 1.0 - cfg.b1 ** t
+        c2 = 1.0 - cfg.b2 ** t
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+            v_new = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g32 * g32
+            step_ = (m_new / c1) / (jnp.sqrt(v_new / c2) + cfg.eps)
+            decay = cfg.weight_decay * p.astype(jnp.float32) if p.ndim > 1 else 0.0
+            p_new = p.astype(jnp.float32) - lr * (step_ + decay)
+            return p_new.astype(p.dtype), m_new.astype(mdt), v_new.astype(mdt)
+
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        flat_p = tdef.flatten_up_to(params)
+        out = []
+        dep = jnp.float32(0.0)
+        for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+            g, dep = _chain(g, dep)
+            p_new, m_new, v_new = upd(g, m, v, p)
+            dep = _dep_of(p_new, dep)
+            out.append((p_new, m_new, v_new))
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v}, {"grad_norm": gnorm, "lr": lr}
+
+    return Optimizer(init, update)
+
+
+# NB: an explicit update-serialization chain (g += prev_p_new[0]*0) was tried
+# to bound concurrent f32 update temporaries; it interacted pathologically
+# with the grad-accumulation scan (temp arena 36 GB → 626 GB on arctic) and
+# was removed.  Kept as a no-op hook for future scheduling experiments.
+_SERIAL_THRESHOLD = 1 << 62
+
+
+def _chain(g, dep):
+    if g.size >= _SERIAL_THRESHOLD:
+        g = g + (dep * 0.0).astype(g.dtype)
+    return g, dep
+
+
+def _dep_of(p_new, dep):
+    if p_new.size >= _SERIAL_THRESHOLD:
+        return p_new.ravel()[0].astype(jnp.float32)
+    return dep
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments; bf16 first moment)
+# ---------------------------------------------------------------------------
+
+
+def _adafactor(cfg: OptimizerConfig) -> Optimizer:
+    lr_fn = cosine_schedule(cfg.lr, cfg.warmup_steps, cfg.total_steps)
+
+    def factored(p):
+        return p.ndim >= 2 and p.shape[-1] >= cfg.factored_threshold and p.shape[-2] >= cfg.factored_threshold
+
+    def init(params):
+        def st(p):
+            if factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                    "m": jnp.zeros_like(p, dtype=jnp.bfloat16),
+                }
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32),
+                    "m": jnp.zeros_like(p, dtype=jnp.bfloat16)}
+
+        return jax.tree_util.tree_map(st, params)
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+        lr = lr_fn(step)
+        b2 = 1.0 - (jnp.asarray(step, jnp.float32) + 1.0) ** -0.8
+
+        def upd(g, s, p):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + 1e-30
+            if factored(p):
+                vr = b2 * s["vr"] + (1 - b2) * jnp.mean(g2, axis=-1)
+                vc = b2 * s["vc"] + (1 - b2) * jnp.mean(g2, axis=-2)
+                denom = (
+                    vr[..., None]
+                    * vc[..., None, :]
+                    / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True)[..., None], 1e-30)
+                )
+                pre = g32 * jax.lax.rsqrt(denom + 1e-30)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = b2 * s["v"] + (1 - b2) * g2
+                pre = g32 * jax.lax.rsqrt(v + 1e-30)
+                new_s = {"v": v}
+            # update clipping (RMS ≤ 1) à la Adafactor
+            rms = jnp.sqrt(jnp.mean(pre * pre) + 1e-30)
+            pre = pre / jnp.maximum(1.0, rms)
+            m = cfg.b1 * s["m"].astype(jnp.float32) + (1 - cfg.b1) * pre
+            decay = cfg.weight_decay * p.astype(jnp.float32) if p.ndim > 1 else 0.0
+            p_new = (p.astype(jnp.float32) - lr * (m + decay)).astype(p.dtype)
+            new_s["m"] = m.astype(jnp.bfloat16)
+            return p_new, new_s
+
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_s = tdef.flatten_up_to(state)
+        flat_p = tdef.flatten_up_to(params)
+        out = []
+        dep = jnp.float32(0.0)
+        for g, s, p in zip(flat_g, flat_s, flat_p):
+            g, dep = _chain(g, dep)
+            p_new, s_new = upd(g, s, p)
+            dep = _dep_of(p_new, dep)
+            out.append((p_new, s_new))
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_s = tdef.unflatten([o[1] for o in out])
+        return new_p, new_s, {"grad_norm": gnorm, "lr": lr}
+
+    return Optimizer(init, update)

@@ -1,0 +1,9 @@
+"""Parallelism: mesh builders, logical-dim sharding rules, validation."""
+from .sharding import (
+    ShardingRules,
+    constrain,
+    make_rules,
+    param_shardings,
+    param_specs,
+    validate_divisibility,
+)

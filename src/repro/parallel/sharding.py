@@ -1,0 +1,155 @@
+"""Logical-dim → mesh-axis sharding rules (DP / TP / EP / SP + pod axis).
+
+Every parameter and activation dim carries a *logical name*; this module maps
+names to physical mesh axes per run mode.  The same model code therefore runs
+on a laptop mesh (1 device), a 256-chip pod (16×16 data×model) and the
+2-pod production mesh (2×16×16 pod×data×model) purely by swapping rules.
+
+Design (DESIGN.md §5):
+* batch            → ('pod','data')  — DP; gradient all-reduce lowers to the
+                      hierarchical intra-pod RS + inter-pod AR + intra-pod AG.
+* heads/d_ff/vocab/experts → 'model' — TP / EP.
+* weight d_model   → 'data' when cfg.fsdp (ZeRO-3-style param sharding).
+* cache seq        → 'model' for decode (flash-decoding SP: each device
+                      streams its KV shard; softmax reductions over the
+                      sharded seq dim lower to psums automatically).
+* long-context (batch < data axis): cache seq over ('data','model').
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import Param, map_params
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Mapping logical dim name → mesh axis (or axes).
+
+    ``mesh`` is optional: when present, modules may use explicit shard_map
+    collectives (e.g. the shard-local embedding gather) instead of relying on
+    the SPMD partitioner's gather handling.
+    """
+
+    rules: Dict[str, Axis]
+    mesh: Optional[Mesh] = None
+
+    def axis(self, name: Optional[str]) -> Axis:
+        if name is None:
+            return None
+        return self.rules.get(name)
+
+    def spec(self, dims: Sequence[Optional[str]]) -> P:
+        return P(*[self.axis(d) for d in dims])
+
+    def axis_size(self, name: str) -> int:
+        if self.mesh is None:
+            return 1
+        return mesh_axis_size(self.mesh, self.axis(name))
+
+
+def make_rules(
+    *,
+    fsdp: bool = False,
+    fsdp_mlp: Optional[bool] = None,  # None: follow fsdp
+    shard_kv_heads: bool = False,
+    batch_axes: Axis = ("pod", "data"),
+    cache_seq_axes: Axis = "model",
+    cache_batch_axes: Axis = "data",
+    with_pod: bool = True,
+    mesh: Optional[Mesh] = None,
+) -> ShardingRules:
+    if batch_axes is None:
+        batch = None
+    elif with_pod:
+        batch = batch_axes
+    else:
+        axes = (batch_axes,) if isinstance(batch_axes, str) else batch_axes
+        batch = tuple(a for a in axes if a != "pod") or None
+    rules: Dict[str, Axis] = {
+        "batch": batch,
+        "act_batch": batch,
+        "seq": None,
+        "d_model": None,
+        "heads": "model",
+        "kv_heads": "model" if shard_kv_heads else None,
+        # weight kv dim is separate from the cache kv dim: serving shards
+        # wk/wv over 'model' even while the cache shards sequence there
+        # (k/v projections re-gather trivially: one token per step).
+        "kv_heads_w": "model",
+        "head_dim": None,
+        "d_ff": "model",
+        "vocab": "model",
+        "experts": "model",
+        "capacity": "data",
+        "layers": None,
+        # FSDP shards weight d_model over data (and pod when present: a 480B
+        # config only fits its optimizer+grads at ≥512-chip scale).
+        "fsdp": (("data", "pod") if with_pod else "data") if fsdp else None,
+        # MLP weights can stay FSDP-sharded while attention goes model-only
+        # (serving capacity/bandwidth split — EXPERIMENTS.md §Perf qwen decode).
+        "fsdp_mlp": (("data", "pod") if with_pod else "data")
+        if (fsdp if fsdp_mlp is None else fsdp_mlp) else None,
+        "cache_batch": cache_batch_axes,
+        "cache_seq": cache_seq_axes,
+        "ssm_state": None,
+        "frontend": None,
+    }
+    return ShardingRules(rules, mesh=mesh)
+
+
+def param_specs(defs: Any, rules: ShardingRules) -> Any:
+    """Param-def tree → PartitionSpec tree (same structure)."""
+    return map_params(lambda p: rules.spec(p.dims), defs)
+
+
+def param_shardings(defs: Any, rules: ShardingRules, mesh: Mesh) -> Any:
+    return map_params(lambda p: NamedSharding(mesh, rules.spec(p.dims)), defs)
+
+
+def constrain(x: jax.Array, rules: ShardingRules, dims: Sequence[Optional[str]]):
+    """with_sharding_constraint by logical dim names (no-op outside jit mesh)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, rules.spec(dims))
+    except (ValueError, RuntimeError):
+        return x  # no mesh in scope (unit tests on CPU)
+
+
+# ---------------------------------------------------------------------------
+# Divisibility validation — catches bad (arch × mesh) pairings before lower().
+# ---------------------------------------------------------------------------
+
+
+def mesh_axis_size(mesh: Mesh, axis: Axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape[axis]
+    size = 1
+    for a in axis:
+        size *= mesh.shape[a]
+    return size
+
+
+def validate_divisibility(defs: Any, rules: ShardingRules, mesh: Mesh) -> None:
+    """Assert every sharded param dim divides its mesh axis product."""
+    problems = []
+
+    def check(p: Param):
+        for size, dim in zip(p.shape, p.dims):
+            ax = rules.axis(dim)
+            n = mesh_axis_size(mesh, ax)
+            if size % n:
+                problems.append(f"dim {dim}={size} not divisible by {ax}({n})")
+        return None
+
+    map_params(check, defs)
+    if problems:
+        raise ValueError("sharding divisibility violations:\n" + "\n".join(problems))

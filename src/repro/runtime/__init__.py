@@ -1,0 +1,4 @@
+"""Runtime: fault tolerance, straggler watchdog, elastic re-meshing."""
+from .fault_tolerance import (
+    FaultToleranceConfig, StragglerWatchdog, TrainController, reshard_state,
+)

@@ -1,0 +1,142 @@
+"""Fault tolerance: preemption-safe training controller, straggler watchdog,
+elastic re-meshing.
+
+1000+-node posture (DESIGN.md §5):
+
+* **Checkpoint/restart** — the controller persists (params, opt_state, step)
+  atomically every ``ckpt_every`` steps (async writer) and auto-resumes from
+  the newest complete checkpoint; the data pipeline is a pure function of the
+  step counter, so a restart replays no data and skips none.
+* **Straggler mitigation** — per-step wall-time EMA; a step exceeding
+  ``straggler_factor``× the EMA raises a callback (on a real cluster: report
+  the slow host to the coordinator for hot-swap; here: counted + logged).
+  An optional hard ``step_timeout_s`` aborts the run (supervisor restarts it
+  on the surviving nodes — combined with elastic re-meshing below).
+* **Elastic re-scale** — ``reshard_state`` moves a checkpointed state tree
+  onto a *different* mesh (e.g. data axis 16 → 12 after losing hosts):
+  checkpoints are mesh-agnostic (full logical arrays), so restore =
+  device_put with the new sharding tree; only batch size / steps-per-epoch
+  change, handled by the pure-function data pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+@dataclasses.dataclass
+class FaultToleranceConfig:
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    keep: int = 3
+    straggler_factor: float = 3.0
+    step_timeout_s: Optional[float] = None
+    ema_beta: float = 0.9
+
+
+class StragglerWatchdog:
+    """Wall-clock step monitor with EMA baseline."""
+
+    def __init__(self, cfg: FaultToleranceConfig, on_straggler: Optional[Callable] = None):
+        self.cfg = cfg
+        self.ema: Optional[float] = None
+        self.stragglers = 0
+        self.on_straggler = on_straggler
+
+    def observe(self, dt: float) -> bool:
+        is_straggler = False
+        if self.ema is not None and dt > self.cfg.straggler_factor * self.ema:
+            self.stragglers += 1
+            is_straggler = True
+            if self.on_straggler:
+                self.on_straggler(dt, self.ema)
+        if self.cfg.step_timeout_s and dt > self.cfg.step_timeout_s:
+            raise TimeoutError(f"step took {dt:.1f}s > {self.cfg.step_timeout_s}s")
+        # Stragglers do not poison the baseline.
+        if self.ema is None:
+            self.ema = dt
+        elif not is_straggler:
+            self.ema = self.cfg.ema_beta * self.ema + (1 - self.cfg.ema_beta) * dt
+        return is_straggler
+
+
+class TrainController:
+    """Runs a jitted step function with checkpoint/restart + watchdog.
+
+    ``state`` is any pytree {params, opt_state, ...}; ``step_fn(state, batch,
+    step) → (state, metrics)``.  ``make_batch(step)`` must be deterministic in
+    ``step`` (restart safety).
+    """
+
+    def __init__(
+        self,
+        step_fn: Callable,
+        make_batch: Callable[[int], Any],
+        ft: FaultToleranceConfig,
+        state_shardings: Optional[Any] = None,
+    ):
+        self.step_fn = step_fn
+        self.make_batch = make_batch
+        self.ft = ft
+        self.ckpt = CheckpointManager(ft.ckpt_dir, keep=ft.keep)
+        self.watchdog = StragglerWatchdog(ft)
+        self.state_shardings = state_shardings
+        self.history: list = []
+
+    def resume_or_init(self, init_state: Any) -> tuple:
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return init_state, 0
+        target = self.state_shardings if self.state_shardings is not None else init_state
+        state = self.ckpt.restore(latest, target)
+        return state, latest
+
+    def run(
+        self,
+        init_state: Any,
+        n_steps: int,
+        preempt_at: Optional[int] = None,
+        log_every: int = 10,
+        log_fn: Callable = print,
+    ) -> Any:
+        """Train to ``n_steps`` (absolute). ``preempt_at`` simulates a kill."""
+        state, start = self.resume_or_init(init_state)
+        for step in range(start, n_steps):
+            if preempt_at is not None and step == preempt_at:
+                # Simulated preemption: mid-run kill after the last checkpoint.
+                raise KeyboardInterrupt(f"simulated preemption at step {step}")
+            batch = self.make_batch(step)
+            t0 = time.monotonic()
+            state, metrics = self.step_fn(state, batch, step)
+            jax.block_until_ready(jax.tree_util.tree_leaves(state)[0])
+            dt = time.monotonic() - t0
+            self.watchdog.observe(dt)
+            self.history.append({k: float(v) for k, v in metrics.items()})
+            if (step + 1) % self.ft.ckpt_every == 0 or step + 1 == n_steps:
+                self.ckpt.save_async(step + 1, state)
+            if (step + 1) % log_every == 0:
+                log_fn(
+                    f"step {step+1}: "
+                    + " ".join(f"{k}={float(v):.4f}" for k, v in metrics.items())
+                    + f" ({dt*1e3:.0f} ms)"
+                )
+        self.ckpt.wait()
+        return state
+
+
+# ---------------------------------------------------------------------------
+# Elastic re-meshing
+# ---------------------------------------------------------------------------
+
+
+def reshard_state(state: Any, shardings: Any) -> Any:
+    """Move a state tree onto new shardings (new mesh size/layout)."""
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(np.asarray(x), s), state, shardings
+    )

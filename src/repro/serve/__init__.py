@@ -1,0 +1,2 @@
+"""Serving: prefill/decode engine, contiguous + paged KV caches."""
+from .engine import PagedKVCache, ServeEngine

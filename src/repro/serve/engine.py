@@ -1,0 +1,118 @@
+"""Serving engine: batched prefill + decode with contiguous or paged KV.
+
+Two cache strategies:
+
+* **Contiguous** (``lm.init_cache``) — what the dry-run decode cells lower:
+  cache sequence sharded over 'model' (flash-decoding SP).
+* **Paged** (this module) — fixed-size pages + per-sequence page tables; the
+  page table is the AXI-Pack indirect stream descriptor and decode attention
+  runs through the ``paged_decode_attention`` kernel (scalar-prefetched page
+  ids → direct HBM page DMAs).  Used by examples/serve_decode.py and the
+  batching tests; pages admit continuous batching (sequences of different
+  lengths enter/leave without reshaping the pool).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops as kops
+from repro.models import lm
+from repro.models.common import rms_norm
+from repro.parallel.sharding import ShardingRules
+
+
+@dataclasses.dataclass
+class PagedKVCache:
+    """Physical page pool + per-sequence page tables (one per layer stack)."""
+
+    k_pages: jax.Array     # (L, P, page, KVH, hd)
+    v_pages: jax.Array
+    page_table: jax.Array  # (B, n_pages) physical ids
+    lengths: jax.Array     # (B,)
+    free: List[int]
+
+    @classmethod
+    def create(cls, cfg: ArchConfig, batch: int, max_len: int, page: int = 64,
+               tp: int = 1):
+        q_heads, kv_heads = cfg.heads_for_tp(tp)
+        n_pages_seq = max_len // page
+        pool = batch * n_pages_seq
+        dt = cfg.compute_dtype
+        return cls(
+            k_pages=jnp.zeros((cfg.n_layers, pool, page, kv_heads, cfg.hd), dt),
+            v_pages=jnp.zeros((cfg.n_layers, pool, page, kv_heads, cfg.hd), dt),
+            page_table=jnp.zeros((batch, n_pages_seq), jnp.int32),
+            lengths=jnp.zeros((batch,), jnp.int32),
+            free=list(range(pool)),
+        )
+
+    @property
+    def page_size(self) -> int:
+        return self.k_pages.shape[2]
+
+    def allocate(self, seq: int, n_pages: int) -> "PagedKVCache":
+        """Host-side page allocation for one sequence (continuous batching)."""
+        ids = [self.free.pop() for _ in range(n_pages)]
+        pt = np.array(self.page_table)  # writable host copy
+        pt[seq, :n_pages] = ids
+        return dataclasses.replace(self, page_table=jnp.asarray(pt))
+
+    def release(self, seq: int) -> "PagedKVCache":
+        pt = np.asarray(self.page_table)
+        ln = int(np.asarray(self.lengths)[seq])
+        used = (ln + self.page_size - 1) // self.page_size
+        self.free.extend(int(p) for p in pt[seq, :used])
+        lengths = np.array(self.lengths)
+        lengths[seq] = 0
+        return dataclasses.replace(self, lengths=jnp.asarray(lengths))
+
+
+class ServeEngine:
+    """Minimal production-shaped engine: prefill, batched greedy decode."""
+
+    def __init__(self, cfg: ArchConfig, params, rules: ShardingRules,
+                 max_len: int = 512, batch: int = 8, impl: str = "pallas"):
+        self.cfg = cfg
+        self.params = params
+        self.rules = rules
+        self.max_len = max_len
+        self.impl = impl
+        self.cache = lm.init_cache(cfg, batch, max_len)
+        self._prefill = jax.jit(
+            lambda p, b, c: lm.prefill(p, b, c, cfg, rules)
+        )
+        self._decode = jax.jit(
+            lambda p, t, c, pos: lm.decode_step(p, t, c, pos, cfg, rules)
+        )
+
+    def generate(
+        self, prompts: jax.Array, n_new: int, greedy: bool = True,
+        rng: Optional[jax.Array] = None,
+    ) -> np.ndarray:
+        """prompts (B, S0) int32 → (B, n_new) generated ids."""
+        b, s0 = prompts.shape
+        logits, self.cache = self._prefill(
+            self.params, {"tokens": prompts}, self.cache
+        )
+        out = []
+        tok = self._sample(logits[:, 0], greedy, rng, 0)
+        for i in range(n_new):
+            out.append(tok)
+            logits, self.cache = self._decode(
+                self.params, tok[:, None], self.cache, s0 + i
+            )
+            tok = self._sample(logits, greedy, rng, i + 1)
+        return np.stack([np.asarray(t) for t in out], axis=1)
+
+    def _sample(self, logits, greedy, rng, step):
+        logits = logits[..., : self.cfg.vocab]  # drop TP padding classes
+        if greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        key = jax.random.fold_in(rng, step)
+        return jax.random.categorical(key, logits).astype(jnp.int32)

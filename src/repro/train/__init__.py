@@ -1,0 +1,2 @@
+"""Training: step factories (SPMD + compressed manual-DP), microbatching."""
+from .train_step import make_train_step, make_compressed_train_step, make_loss_fn

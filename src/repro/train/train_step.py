@@ -1,0 +1,140 @@
+"""Train-step factory: microbatch accumulation, optional int8-compressed DP.
+
+Two step builders:
+
+* ``make_train_step``            — SPMD (pjit) path: batch sharded over
+  (pod, data), gradient reduction emitted by XLA (reduce-scatter under FSDP).
+* ``make_compressed_train_step`` — manual-DP path: ``shard_map`` manual over
+  (pod, data) with the model axis left automatic; the gradient all-reduce is
+  the int8 error-feedback collective (optim.compression), 4× fewer wire
+  bytes.  For non-FSDP configs (params replicated across DP).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import lm
+from repro.optim.optimizers import Optimizer
+from repro.optim import compression
+from repro.parallel.sharding import ShardingRules, make_rules
+
+
+def _split_microbatches(batch: Dict[str, jax.Array], n: int):
+    def sp(x):
+        b = x.shape[0]
+        assert b % n == 0
+        return x.reshape(n, b // n, *x.shape[1:])
+
+    return jax.tree_util.tree_map(sp, batch)
+
+
+def make_loss_fn(cfg: ArchConfig, rules: ShardingRules):
+    def loss_fn(params, batch):
+        return lm.train_loss(params, batch, cfg, rules)
+
+    return loss_fn
+
+
+def grads_with_accum(loss_fn, params, batch, grad_accum: int):
+    """Returns (mean loss, metrics, grads) with lax.scan microbatching."""
+    if grad_accum == 1:
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch
+        )
+        return loss, metrics, grads
+
+    micro = _split_microbatches(batch, grad_accum)
+
+    def step(carry, mb):
+        acc, loss_sum = carry
+        (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+        acc = jax.tree_util.tree_map(jnp.add, acc, g)
+        return (acc, loss_sum + loss), None
+
+    zeros = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (acc, loss_sum), _ = jax.lax.scan(step, (zeros, jnp.float32(0.0)), micro)
+    grads = jax.tree_util.tree_map(lambda g: g / grad_accum, acc)
+    loss = loss_sum / grad_accum
+    return loss, {"ce_loss": loss}, grads
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    opt: Optimizer,
+    rules: ShardingRules,
+    grad_accum: int = 1,
+) -> Callable:
+    """(params, opt_state, batch, step) → (params, opt_state, metrics)."""
+    loss_fn = make_loss_fn(cfg, rules)
+
+    def train_step(params, opt_state, batch, step):
+        loss, metrics, grads = grads_with_accum(loss_fn, params, batch, grad_accum)
+        new_params, new_opt, opt_metrics = opt.update(grads, opt_state, params, step)
+        return new_params, new_opt, {"loss": loss, **metrics, **opt_metrics}
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Int8-compressed manual-DP step
+# ---------------------------------------------------------------------------
+
+
+def make_compressed_train_step(
+    cfg: ArchConfig,
+    opt: Optimizer,
+    mesh: Mesh,
+    dp_axes: Tuple[str, ...] = ("data",),
+    grad_accum: int = 1,
+) -> Callable:
+    """Manual-DP train step with int8 error-feedback gradient all-reduce.
+
+    Params must be replicated across ``dp_axes`` (cfg.fsdp=False).  The
+    error-feedback residual rides in ``opt_state['err_fb']`` with a leading
+    device dim sharded over the DP axes.
+    """
+    assert not cfg.fsdp, "compressed DP path requires replicated params"
+    # Inside the manual region the batch is device-local: no batch constraint.
+    inner_rules = make_rules(
+        batch_axes=None, with_pod=False, shard_kv_heads=cfg.shard_kv_heads
+    )
+    loss_fn = make_loss_fn(cfg, inner_rules)
+    axis = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+    def local_step(params, opt_state, batch, step, err_fb):
+        loss, metrics, grads = grads_with_accum(loss_fn, params, batch, grad_accum)
+        loss = jax.lax.pmean(loss, axis)
+        grads, new_err = compression.compressed_grad_psum(grads, axis, err_fb[0])
+        n_dev = jax.lax.psum(1, axis)
+        grads = jax.tree_util.tree_map(lambda g: g / n_dev, grads)
+        new_params, new_opt, opt_metrics = opt.update(grads, opt_state, params, step)
+        return new_params, new_opt, new_err[None], {"loss": loss, **opt_metrics}
+
+    n_dp = 1
+    for a in dp_axes:
+        n_dp *= mesh.shape[a]
+
+    from jax import shard_map
+
+    batch_spec = P(axis)
+    mapped = shard_map(
+        local_step,
+        mesh=mesh,
+        in_specs=(P(), P(), batch_spec, P(), P(axis)),
+        out_specs=(P(), P(), P(axis), P()),
+        check_vma=False,
+    )
+
+    def train_step(params, opt_state, batch, step, err_fb):
+        return mapped(params, opt_state, batch, step, err_fb)
+
+    train_step.init_err_fb = lambda params: jnp.zeros(
+        (n_dp, compression.tree_size(params)), jnp.float32
+    )
+    return train_step

@@ -1,0 +1,116 @@
+"""Per-kernel allclose validation: stream converters vs pure-jnp oracles.
+
+Sweeps shapes/dtypes per the kernel-validation contract and adds
+hypothesis property tests on the packing invariants.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+DTYPES = [jnp.float32, jnp.bfloat16, jnp.int32]
+SHAPES = [(16, 128), (64, 128), (64, 256), (40, 384), (128, 512)]
+
+
+def _rand(rng, shape, dtype):
+    x = rng.normal(size=shape)
+    if dtype == jnp.int32:
+        return jnp.asarray((x * 100).astype(np.int32))
+    return jnp.asarray(x, dtype=dtype)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("stride", [1, 2, 3, 5])
+def test_strided_gather(shape, dtype, stride):
+    rng = np.random.default_rng(0)
+    src = _rand(rng, shape, dtype)
+    count = max(1, (shape[0] - 1) // stride)
+    out = ops.strided_gather(src, 0, stride, count)
+    expect = ref.strided_gather(src, 0, stride, count)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+@pytest.mark.parametrize("shape", SHAPES[:3])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("stride", [2, 4])
+def test_strided_scatter(shape, dtype, stride):
+    rng = np.random.default_rng(1)
+    count = (shape[0] - 1) // stride
+    packed = _rand(rng, (count, shape[1]), dtype)
+    dst = _rand(rng, shape, dtype)
+    out = ops.strided_scatter(dst, packed, 1, stride)
+    expect = ref.strided_scatter(dst, packed, 1, stride)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("count", [1, 8, 23, 64])
+def test_indirect_gather(shape, dtype, count):
+    rng = np.random.default_rng(2)
+    src = _rand(rng, shape, dtype)
+    idx = jnp.asarray(rng.integers(0, shape[0], count), dtype=jnp.int32)
+    out = ops.indirect_gather(src, idx)
+    expect = ref.indirect_gather(src, idx)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+@pytest.mark.parametrize("shape", SHAPES[:3])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("count", [8, 13])
+def test_indirect_scatter_unique(shape, dtype, count):
+    rng = np.random.default_rng(3)
+    packed = _rand(rng, (count, shape[1]), dtype)
+    dst = _rand(rng, shape, dtype)
+    idx = jnp.asarray(rng.permutation(shape[0])[:count], dtype=jnp.int32)
+    out = ops.indirect_scatter(dst, packed, idx)
+    expect = ref.indirect_scatter(dst, packed, idx)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_indirect_scatter_preserves_untouched():
+    dst = jnp.full((32, 128), 7.0)
+    packed = jnp.zeros((4, 128))
+    idx = jnp.asarray([1, 2, 3, 4], dtype=jnp.int32)
+    out = ops.indirect_scatter(dst, packed, idx)
+    assert np.allclose(np.asarray(out)[0], 7.0)
+    assert np.allclose(np.asarray(out)[5:], 7.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_rows=st.integers(8, 64),
+    count=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gather_scatter_roundtrip(n_rows, count, seed):
+    """Property: scatter(gather(x, idx), idx) restores x at idx (unique idx)."""
+    rng = np.random.default_rng(seed)
+    count = min(count, n_rows)
+    src = jnp.asarray(rng.normal(size=(n_rows, 128)), dtype=jnp.float32)
+    idx = jnp.asarray(rng.permutation(n_rows)[:count], dtype=jnp.int32)
+    packed = ops.indirect_gather(src, idx)
+    restored = ops.indirect_scatter(jnp.zeros_like(src), packed, idx)
+    np.testing.assert_allclose(
+        np.asarray(restored)[np.asarray(idx)], np.asarray(src)[np.asarray(idx)]
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    stride=st.integers(2, 8),
+    count=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_strided_equals_indirect_with_arange(stride, count, seed):
+    """Property: a strided stream ≡ an indirect stream with arange indices."""
+    rng = np.random.default_rng(seed)
+    n = stride * count + 1
+    src = jnp.asarray(rng.normal(size=(n, 128)), dtype=jnp.float32)
+    a = ops.strided_gather(src, 0, stride, count)
+    b = ops.indirect_gather(src, jnp.arange(count, dtype=jnp.int32) * stride)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,187 @@
+"""Core library tests: stream semantics, bus model laws, bank simulator."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BankConfig,
+    BusConfig,
+    ContiguousStream,
+    IndirectStream,
+    StridedStream,
+    System,
+    beats_for,
+    indirect_traffic,
+    indirect_utilization_ceiling,
+    stream_cycles,
+    strided_traffic,
+)
+from repro.core.banksim import (
+    crossbar_area_kge,
+    indirect_utilization,
+    simulate_stream,
+    strided_utilization,
+)
+
+
+# ---------------------------------------------------------------------------
+# Stream descriptors
+# ---------------------------------------------------------------------------
+
+
+def test_stride_one_degrades_to_base():
+    s = StridedStream(base=0, elem_bits=32, count=16, stride=1)
+    assert s.kind.value == "base"
+
+
+def test_indirect_offsets():
+    idx = np.array([3, 1, 4, 1, 5])
+    s = IndirectStream(base=10, elem_bits=32, count=5, indices=idx)
+    np.testing.assert_array_equal(s.element_offsets(), 10 + idx)
+
+
+# ---------------------------------------------------------------------------
+# Bus model: the paper's analytical laws
+# ---------------------------------------------------------------------------
+
+
+def test_base_strided_narrow_beats():
+    """BASE strided: one narrow beat per element at the calibrated issue cost
+    (base_strided_cpe, calibrated on Fig. 3a's ismt); bus utilization is
+    bounded by e/W = 12.5 % for fp32 on 256 bits."""
+    cfg = BusConfig()
+    s = StridedStream(base=0, elem_bits=32, count=256, stride=7)
+    cost = stream_cycles(s, System.BASE, cfg)
+    assert cost.cycles == 256 * cfg.base_strided_cpe
+    assert cost.data_beats == 256
+    useful_fraction = (256 * 32) / (cost.data_beats * cfg.bus_bits)
+    assert useful_fraction == pytest.approx(0.125)  # e/W beat efficiency
+
+
+def test_pack_strided_is_fully_packed():
+    cfg = BusConfig()
+    s = StridedStream(base=0, elem_bits=32, count=256, stride=7)
+    cost = stream_cycles(s, System.PACK, cfg)
+    assert cost.cycles == 32           # 256 * 32b / 256b
+    assert (256 * 32) / (cost.cycles * cfg.bus_bits) == pytest.approx(1.0)
+
+
+@pytest.mark.parametrize("i_bits,expect", [(32, 0.5), (16, 2 / 3), (8, 0.8)])
+def test_r_over_r_plus_one_law(i_bits, expect):
+    """§III-E: ideal indirect utilization = r/(r+1)."""
+    assert indirect_utilization_ceiling(32, i_bits) == pytest.approx(expect)
+    # And the cycle model realizes exactly that ceiling with no conflicts:
+    cfg = BusConfig()
+    n = 1024
+    idx = np.arange(n)
+    s = IndirectStream(base=0, elem_bits=32, count=n, indices=idx, index_bits=i_bits)
+    cost = stream_cycles(s, System.PACK, cfg)
+    assert cost.data_beats / cost.cycles == pytest.approx(expect, rel=1e-3)
+
+
+def test_pack_never_slower_than_base():
+    """The paper's request-bundling guarantee: PACK ≤ BASE for any stream."""
+    cfg = BusConfig()
+    rng = np.random.default_rng(0)
+    for count in [1, 2, 7, 64, 999]:
+        s1 = StridedStream(base=0, elem_bits=32, count=count, stride=5)
+        assert (
+            stream_cycles(s1, System.PACK, cfg).cycles
+            <= stream_cycles(s1, System.BASE, cfg).cycles
+        )
+        idx = rng.integers(0, 4096, count)
+        s2 = IndirectStream(base=0, elem_bits=32, count=count, indices=idx)
+        assert (
+            stream_cycles(s2, System.PACK, cfg).cycles
+            <= stream_cycles(s2, System.BASE, cfg).cycles
+        )
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    count=st.integers(1, 2048),
+    elem_bits=st.sampled_from([8, 16, 32, 64]),
+    stride=st.integers(2, 64),
+)
+def test_pack_speedup_bounded_by_packing_factor(count, elem_bits, stride):
+    """Property: PACK speedup over BASE ≤ cpe × bus/elem ratio (Fig. 3d limit)."""
+    cfg = BusConfig()
+    s = StridedStream(base=0, elem_bits=elem_bits, count=count, stride=stride)
+    b = stream_cycles(s, System.BASE, cfg).cycles
+    p = stream_cycles(s, System.PACK, cfg).cycles
+    assert b / p <= cfg.base_strided_cpe * cfg.bus_bits / elem_bits + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Traffic accounting
+# ---------------------------------------------------------------------------
+
+
+def test_traffic_accounting():
+    t = strided_traffic(count=256, elem_bytes=4, stride=8, granule_bytes=32)
+    assert t.useful_bytes == 1024
+    assert t.base_bytes == 256 * 32           # one granule per element
+    assert t.pack_bytes == 1024               # dense
+    ti = indirect_traffic(count=256, elem_bytes=4, index_bytes=4)
+    assert ti.index_bus_bytes_base == 1024
+    assert ti.index_bus_bytes_pack == 0       # endpoint-side indirection
+
+
+# ---------------------------------------------------------------------------
+# Bank simulator: Fig. 5 sensitivity laws
+# ---------------------------------------------------------------------------
+
+
+def test_prime_banks_beat_pow2_on_strided():
+    """Fig. 5b: prime bank counts avoid stride aliasing."""
+    util = {}
+    for banks in (16, 17):
+        cfg = BankConfig(n_ports=8, n_banks=banks, queue_depth=32)
+        util[banks] = np.mean([strided_utilization(s, cfg) for s in range(64)])
+    assert util[17] > util[16]
+    assert util[17] > 0.9  # paper: 17 banks ≈ 95 % of ideal
+
+
+def test_indirect_monotonic_in_banks():
+    """Fig. 5a: utilization rises monotonically with bank count."""
+    us = []
+    for banks in (8, 16, 32):
+        cfg = BankConfig(n_ports=8, n_banks=banks, queue_depth=32)
+        us.append(indirect_utilization(cfg, 32, 32, burst_len=256))
+    assert us[0] < us[1] < us[2]
+    assert us[-1] <= 0.5 + 1e-9  # r/(r+1) ceiling for 32b/32b
+
+
+def test_indirect_ratio_effect():
+    """Fig. 5a: smaller indices (larger r) raise achievable utilization."""
+    cfg = BankConfig(n_ports=8, n_banks=17, queue_depth=32)
+    u32 = indirect_utilization(cfg, 32, 32, burst_len=256)
+    u16 = indirect_utilization(cfg, 32, 16, burst_len=256)
+    u8 = indirect_utilization(cfg, 32, 8, burst_len=256)
+    assert u32 < u16 < u8
+
+
+def test_larger_elements_reduce_strided_conflicts():
+    """Fig. 5b: with 64-bit elements conflicts drop vs 32-bit."""
+    cfg = BankConfig(n_ports=8, n_banks=16, queue_depth=32)
+    u32 = np.mean([strided_utilization(s, cfg, elem_bits=32) for s in range(32)])
+    u64 = np.mean([strided_utilization(s, cfg, elem_bits=64) for s in range(32)])
+    assert u64 > u32
+
+
+def test_ideal_memory_is_conflict_free():
+    cfg = BankConfig(n_ports=8, n_banks=17, ideal=True)
+    s = StridedStream(base=0, elem_bits=32, count=256, stride=8)
+    r = simulate_stream(s, cfg)
+    assert r.utilization == 1.0 and r.stall_cycles == 0
+
+
+def test_crossbar_area_model():
+    """Fig. 5c: prime counts pay a modulo/divide overhead that shrinks with m."""
+    a16, a17 = crossbar_area_kge(8, 16), crossbar_area_kge(8, 17)
+    a32, a31 = crossbar_area_kge(8, 32), crossbar_area_kge(8, 31)
+    assert a17 > a16                      # prime overhead exists
+    rel17 = (a17 - a16) / a16
+    rel31 = (a31 - crossbar_area_kge(8, 30)) / crossbar_area_kge(8, 30)
+    assert rel31 < rel17                  # and decreases with bank count
+    assert a32 > a16                      # datapath grows with banks

@@ -1,0 +1,144 @@
+"""Property tests for the numeric core: chunked ops ≡ dense references.
+
+These invariants are what make the memory-discipline machinery safe: every
+chunked/streamed formulation must be exactly the math of its dense form.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.models.common import (
+    apply_rope,
+    chunked_mha,
+    chunked_softmax_xent,
+    decayed_cumsum,
+    rms_norm,
+)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    s=st.sampled_from([8, 16, 32]),
+    h=st.sampled_from([2, 4]),
+    kvh=st.sampled_from([1, 2]),
+    chunk=st.sampled_from([4, 8, 16]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_chunked_mha_equals_dense(s, h, kvh, chunk, causal, seed):
+    if h % kvh:
+        kvh = 1
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(2, s, h, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, s, kvh, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, s, kvh, 16)), jnp.float32)
+    out = chunked_mha(q, k, v, causal=causal, kv_chunk=chunk)
+    # dense reference expects (B,H,S,D)
+    expect = ref.mha(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal,
+    ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.sampled_from([8, 32, 64]),
+    chunk=st.sampled_from([4, 8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decayed_cumsum_equals_sequential(t, chunk, seed):
+    """h_t = a_t h_{t-1} + b_t — chunked assoc-scan vs naive loop."""
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.uniform(0.2, 1.0, size=(t, 4, 3)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(t, 4, 3)), jnp.float32)
+    h0 = jnp.asarray(rng.normal(size=(4, 3)), jnp.float32)
+    if t % chunk:
+        chunk = t
+    hs, h_last = decayed_cumsum(a, b, h0, chunk=chunk)
+    h = np.asarray(h0)
+    seq = []
+    for i in range(t):
+        h = np.asarray(a)[i] * h + np.asarray(b)[i]
+        seq.append(h.copy())
+    np.testing.assert_allclose(np.asarray(hs), np.stack(seq), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h_last), seq[-1], rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    s=st.sampled_from([8, 16, 64]),
+    v=st.sampled_from([32, 100]),
+    chunk=st.sampled_from([4, 8, 16]),
+    pad=st.sampled_from([0, 12]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_chunked_xent_equals_dense(s, v, chunk, pad, seed):
+    rng = np.random.default_rng(seed)
+    if s % chunk:
+        chunk = s
+    x = jnp.asarray(rng.normal(size=(2, s, 24)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(24, v + pad)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, v, (2, s)))
+    mask = jnp.asarray(rng.random((2, s)) > 0.3, jnp.float32)
+    loss, cnt = chunked_softmax_xent(x, w, labels, mask, seq_chunk=chunk, n_valid=v)
+    # dense reference (mask padded classes)
+    logits = np.asarray(x) @ np.asarray(w)
+    logits[..., v:] = -1e30
+    logits = logits - logits.max(-1, keepdims=True)
+    logp = logits - np.log(np.exp(logits).sum(-1, keepdims=True))
+    nll = -np.take_along_axis(logp, np.asarray(labels)[..., None], -1)[..., 0]
+    m = np.asarray(mask)
+    expect = (nll * m).sum() / max(m.sum(), 1)
+    np.testing.assert_allclose(float(loss), expect, rtol=1e-4, atol=1e-5)
+    assert float(cnt) == m.sum()
+
+
+@settings(max_examples=15, deadline=None)
+@given(offset=st.integers(0, 64), seed=st.integers(0, 2**31 - 1))
+def test_rope_relative_position_invariance(offset, seed):
+    """RoPE property: <rope(q,i), rope(k,j)> depends only on i-j."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, 32)), jnp.float32)
+
+    def dot_at(i, j):
+        qr = apply_rope(q, jnp.asarray([i]), 1e4)
+        kr = apply_rope(k, jnp.asarray([j]), 1e4)
+        return float(jnp.sum(qr * kr))
+
+    d1 = dot_at(3, 1)
+    d2 = dot_at(3 + offset, 1 + offset)
+    np.testing.assert_allclose(d1, d2, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    scale=st.floats(0.1, 100.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rms_norm_scale_invariance(scale, seed):
+    """rms_norm(c·x) == rms_norm(x) for any positive c (f32)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(2, 8, 32)) + 0.1, jnp.float32)
+    g = jnp.asarray(rng.normal(size=(32,)) * 0.1, jnp.float32)
+    a = rms_norm(x, g)
+    b = rms_norm(x * scale, g)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_int8_quantize_bounded_error(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(16, 128)), jnp.float32)
+    q, scale = ref.int8_quantize(x)
+    back = ref.int8_dequantize(q, scale)
+    # error bounded by half an LSB of the per-row scale
+    bound = np.asarray(scale)[:, 0] / 2 + 1e-7
+    err = np.abs(np.asarray(back) - np.asarray(x)).max(axis=1)
+    assert (err <= bound + 1e-6).all()

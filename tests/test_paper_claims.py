@@ -1,0 +1,144 @@
+"""Assertions tying the reproduction to the paper's measured claims
+(EXPERIMENTS.md §Paper-reproduction table)."""
+import numpy as np
+import pytest
+
+from benchmarks.paper_workloads import (
+    evaluate, fig3a_rows, gemv_model, ismt_model, spmv_model, synth_csr,
+    trmv_model,
+)
+from benchmarks.fig3_scaling import fig3d_ismt_scaling, fig3e_spmv_scaling
+from repro.core import System
+
+
+@pytest.fixture(scope="module")
+def rows():
+    return {r.name: r for r in fig3a_rows(n=256, sparse_rows=96, avg_nnz=390)}
+
+
+def test_ismt_speedup_matches_paper(rows):
+    assert rows["ismt"].speedup_pack == pytest.approx(5.4, rel=0.15)
+
+
+def test_gemv_utilization_matches_paper(rows):
+    assert rows["gemv-col"].util_pack == pytest.approx(0.87, abs=0.03)
+
+
+def test_gemv_row_base_utilization():
+    util = gemv_model(256, "row").evaluate(System.BASE).bus_util
+    assert util == pytest.approx(0.37, abs=0.03)
+
+
+def test_trmv_utilization_matches_paper(rows):
+    assert rows["trmv-col"].util_pack == pytest.approx(0.72, abs=0.08)
+
+
+def test_spmv_speedup_matches_paper(rows):
+    assert rows["spmv"].speedup_pack == pytest.approx(2.4, rel=0.25)
+
+
+def test_sssp_speedup_and_ordering(rows):
+    """Model utilization for indirect workloads is documented-high (~58 %,
+    full mem/compute overlap vs Ara's measured 35-39 % with issue stalls);
+    the invariants tested: sssp ≥ spmv utilization (paper ordering) and
+    speedup in the paper's indirect band."""
+    assert rows["sssp"].util_pack >= rows["spmv"].util_pack - 0.01
+    assert 1.8 <= rows["sssp"].speedup_pack <= 3.5
+    # and all indirect utils respect the r/(r+1)=50 % bus ceiling + overlap
+    assert rows["sssp"].util_pack < 0.67
+
+
+def test_pack_close_to_ideal(rows):
+    """Paper: PACK reaches 97 % of IDEAL on average."""
+    fracs = [r.pack_vs_ideal for r in rows.values()]
+    assert np.mean(fracs) > 0.9
+
+
+def test_fig3d_bus_width_convergence():
+    """ismt speedups converge to ≈1.9 / 3.2 / 5.4 for 64/128/256-bit buses."""
+    rows = fig3d_ismt_scaling(sizes=(256,), widths=(64, 128, 256))
+    got = {r["bus_bits"]: r["speedup"] for r in rows}
+    assert got[64] == pytest.approx(1.9, rel=0.15)
+    assert got[128] == pytest.approx(3.2, rel=0.15)
+    assert got[256] == pytest.approx(5.4, rel=0.15)
+
+
+def test_fig3d_small_matrices_lose_speedup():
+    rows = fig3d_ismt_scaling(sizes=(8, 256), widths=(256,))
+    small = next(r for r in rows if r["n"] == 8)["speedup"]
+    big = next(r for r in rows if r["n"] == 256)["speedup"]
+    assert small < big
+    assert small >= 1.0  # request bundling: never a slowdown
+
+
+def test_fig3e_nnz_scaling():
+    rows = fig3e_spmv_scaling(nnz_list=(2, 390), widths=(256,), n_rows=48)
+    small = next(r for r in rows if r["avg_nnz"] == 2)["speedup"]
+    big = next(r for r in rows if r["avg_nnz"] == 390)["speedup"]
+    assert small < big
+    assert small >= 1.0
+    assert big == pytest.approx(2.4, rel=0.3)
+
+
+# ---------------------------------------------------------------------------
+# Executable workload implementations agree with numpy ground truth
+# ---------------------------------------------------------------------------
+
+
+def test_workload_impls_correct():
+    import jax.numpy as jnp
+    from benchmarks import workload_impls as W
+    from repro.kernels import ref
+
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(64, 64)).astype(np.float32)
+    x = rng.normal(size=(64,)).astype(np.float32)
+
+    out, _ = W.ismt(jnp.asarray(a))
+    np.testing.assert_allclose(np.asarray(out), a.T)
+
+    y, _ = W.gemv_col(jnp.asarray(a), jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(y), a @ x, rtol=1e-4)
+
+    y, _ = W.trmv(jnp.asarray(a), jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(y), np.triu(a) @ x, rtol=1e-4)
+
+    # spmv / pagerank on a synthetic ELL matrix
+    indptr, indices, data = synth_csr(48, 6, n_cols=48, seed=3)
+    vals, cols = ref.csr_to_ell(indptr, indices, data, 48)
+    dense = np.zeros((48, 48), np.float32)
+    for r in range(48):
+        dense[r, indices[indptr[r]:indptr[r+1]]] = data[indptr[r]:indptr[r+1]]
+    y, _ = W.spmv(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(x[:48]))
+    np.testing.assert_allclose(np.asarray(y), dense @ x[:48], rtol=1e-4, atol=1e-4)
+
+    # pagerank converges to a distribution on a well-posed stochastic matrix
+    adj = (np.abs(dense) > 0).astype(np.float32) + np.eye(48, dtype=np.float32)
+    col_sum = adj.sum(0, keepdims=True)
+    pvals = adj / col_sum                     # column-stochastic
+    pv, pc = ref.csr_to_ell(*_to_csr(pvals), 48)
+    r, _ = W.pagerank(jnp.asarray(pv), jnp.asarray(pc), 48, iters=50)
+    r = np.asarray(r)
+    assert np.all(r > 0)
+    np.testing.assert_allclose(r.sum(), 1.0, atol=0.05)
+
+    # sssp: distances decrease monotonically and src = 0
+    mask = vals != 0
+    wv = np.abs(vals) + mask * 0.1
+    d, _ = W.sssp(jnp.asarray(wv), jnp.asarray(cols), jnp.asarray(mask),
+                  src=0, n=48, iters=8)
+    d = np.asarray(d)
+    assert d[0] == 0.0
+    assert np.isfinite(d).sum() >= 1
+
+
+def _to_csr(dense):
+    indptr = [0]
+    indices, data = [], []
+    for r in range(dense.shape[0]):
+        nz = np.nonzero(dense[r])[0]
+        indices.extend(nz.tolist())
+        data.extend(dense[r, nz].tolist())
+        indptr.append(len(indices))
+    return (np.asarray(indptr), np.asarray(indices, np.int32),
+            np.asarray(data, np.float32))

@@ -1,0 +1,100 @@
+"""Serving-path tests: chunked prefill equivalence, engine generation,
+paged cache bookkeeping, w8a16 end-to-end generation."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCH_NAMES, smoke_config
+from repro.models import lm
+from repro.parallel.sharding import make_rules
+from repro.serve import PagedKVCache, ServeEngine
+
+RULES = make_rules(with_pod=False, batch_axes=None)
+
+
+@pytest.mark.parametrize("name", ["yi-6b", "gemma3-27b", "rwkv6-3b",
+                                  "hymba-1.5b", "olmoe-1b-7b"])
+def test_chunked_prefill_equals_monolithic(name):
+    cfg = smoke_config(name)
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=16.0)  # no drops
+    rng = np.random.default_rng(0)
+    params = lm.init_model(cfg, jax.random.PRNGKey(0))
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 32)))
+    c1 = lm.init_cache(cfg, 2, 32)
+    l1, c1 = lm.prefill(params, {"tokens": toks}, c1, cfg, RULES)
+    c2 = lm.init_cache(cfg, 2, 32)
+    l2, c2 = lm.prefill_chunked(params, {"tokens": toks}, c2, cfg, RULES, chunk=8)
+    assert float(jnp.abs(l1 - l2).max()) < 2e-2
+    for a, b in zip(jax.tree_util.tree_leaves(c1), jax.tree_util.tree_leaves(c2)):
+        assert float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max()) < 2e-2
+
+
+def test_engine_greedy_deterministic():
+    cfg = smoke_config("yi-6b")
+    params = lm.init_model(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (3, 8)), jnp.int32)
+    e1 = ServeEngine(cfg, params, RULES, max_len=32, batch=3)
+    e2 = ServeEngine(cfg, params, RULES, max_len=32, batch=3)
+    o1 = e1.generate(prompts, n_new=8)
+    o2 = e2.generate(prompts, n_new=8)
+    np.testing.assert_array_equal(o1, o2)
+    assert o1.shape == (3, 8)
+    assert o1.max() < cfg.vocab  # TP-padding classes never sampled
+
+
+def test_engine_generation_matches_decode_loop():
+    """Engine output == hand-rolled prefill+decode greedy loop."""
+    cfg = smoke_config("qwen2.5-14b")
+    params = lm.init_model(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (2, 6)), jnp.int32)
+    eng = ServeEngine(cfg, params, RULES, max_len=24, batch=2)
+    out = eng.generate(prompts, n_new=6)
+
+    cache = lm.init_cache(cfg, 2, 24)
+    logits, cache = lm.prefill(params, {"tokens": prompts}, cache, cfg, RULES)
+    tok = jnp.argmax(logits[:, 0, : cfg.vocab], axis=-1).astype(jnp.int32)
+    ref = []
+    for i in range(6):
+        ref.append(np.asarray(tok))
+        logits, cache = lm.decode_step(params, tok[:, None], cache, 6 + i, cfg, RULES)
+        tok = jnp.argmax(logits[:, : cfg.vocab], axis=-1).astype(jnp.int32)
+    np.testing.assert_array_equal(out, np.stack(ref, axis=1))
+
+
+def test_paged_cache_allocation_lifecycle():
+    cfg = smoke_config("yi-6b")
+    cache = PagedKVCache.create(cfg, batch=4, max_len=64, page=16)
+    assert len(cache.free) == 16
+    cache = cache.allocate(seq=0, n_pages=3)
+    assert len(cache.free) == 13
+    table = np.asarray(cache.page_table)
+    assert len(set(table[0, :3].tolist())) == 3  # distinct physical pages
+    lengths = np.asarray(cache.lengths).copy()
+    lengths[0] = 40  # 3 pages in use
+    cache = dataclasses.replace(cache, lengths=jnp.asarray(lengths))
+    cache = cache.release(seq=0)
+    assert len(cache.free) == 16
+    assert int(np.asarray(cache.lengths)[0]) == 0
+
+
+def test_w8a16_generation_consistent():
+    """Quantized-MLP generation produces valid tokens and mostly agrees with
+    full precision on a short greedy rollout."""
+    cfg = smoke_config("qwen1.5-32b")
+    params = lm.init_model(cfg, jax.random.PRNGKey(2))
+    qparams = lm.quantize_mlp_weights(params, cfg)
+    rng = np.random.default_rng(2)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (2, 8)), jnp.int32)
+    o_full = ServeEngine(cfg, params, RULES, max_len=24, batch=2).generate(prompts, 4)
+    o_q = ServeEngine(cfg, qparams, RULES, max_len=24, batch=2).generate(prompts, 4)
+    assert o_q.shape == o_full.shape
+    assert o_q.max() < cfg.vocab
+    # random-init logits are near-ties, so just require the first step agrees
+    # for at least one sequence (quantization err ≲0.04 per logit)
+    assert (o_q[:, 0] == o_full[:, 0]).any()
