@@ -1,8 +1,9 @@
 """Benchmark orchestrator — one section per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows per the harness contract, then
-structured sections for Fig. 3a-e and Fig. 5a-c plus (when dry-run artifacts
-exist) the roofline table.
+Prints ``name,us_per_call,derived`` CSV rows per the harness contract
+(documented in benchmarks/README.md), then structured sections for
+Fig. 3a-e, Fig. 5a-c, the continuous-batching serving sweep, and (when
+dry-run artifacts exist) the roofline table.
 
     PYTHONPATH=src python -m benchmarks.run [--quick]
 """
@@ -89,6 +90,16 @@ def main() -> None:
     print("\n# Fig5c: crossbar area model")
     for row in fig5c_crossbar_area():
         print(f"fig5c,banks={row['banks']},kGE={row['area_kge']:.1f},prime={row['prime']}")
+
+    # ---- Serving: continuous batching over paged streams --------------
+    from .serving import serving_rows
+    print("\n# Serving: decode tokens/s vs batch; per-step PACK vs BASE bytes")
+    for row in serving_rows(quick=args.quick):
+        print(f"serving,b={row['batch']},tokens_s={row['tokens_per_s']:.0f},"
+              f"decode_steps={row['decode_steps']},"
+              f"evictions={row['evictions']},"
+              f"pack_KiB={row['pack_kib']:.0f},base_KiB={row['base_kib']:.0f},"
+              f"pack_eff={row['pack_eff']:.1%},base_eff={row['base_eff']:.1%}")
 
     # ---- Roofline (if dry-run artifacts exist) ------------------------
     try:

@@ -15,12 +15,14 @@ from .streams import (
     StridedStream,
     beats_for,
     elements_per_beat,
+    page_table_streams,
 )
 from .packing import (
     Traffic,
     indirect_traffic,
     pack_indirect,
     pack_strided,
+    paged_decode_traffic,
     strided_traffic,
     unpack_indirect,
     unpack_strided,

@@ -25,6 +25,7 @@ __all__ = [
     "Traffic",
     "strided_traffic",
     "indirect_traffic",
+    "paged_decode_traffic",
 ]
 
 
@@ -133,3 +134,40 @@ def indirect_traffic(
     # PACK fetches indices endpoint-side: they cost memory bandwidth but not
     # core-side bus bytes; we still report them for the HBM energy proxy.
     return Traffic(useful, base, pack, idx, 0)
+
+
+def paged_decode_traffic(
+    lengths,
+    page_size: int,
+    pages_per_seq: int,
+    token_bytes: int,
+    index_bytes: int = 4,
+    granule_bytes: int = 32,
+) -> Traffic:
+    """Traffic of one batched paged-KV decode step, BASE vs PACK.
+
+    * **BASE** is the serving system without indirection: a contiguous KV
+      cache padded to the maximum sequence length, so every decode step
+      streams ``batch × pages_per_seq × page_size`` token rows regardless of
+      how long each sequence actually is.  No index traffic.
+    * **PACK** is the paged path: only the mapped pages of each sequence move
+      (whole pages — the packing granule of this stream), and the page-table
+      entries are the indirect-stream index fetch.  The indices are resolved
+      near memory, so they are charged to ``index_bus_bytes_pack`` (the HBM
+      side), never to the core-side bus — but they do lower
+      ``pack_efficiency``, matching the r/(r+1) ceiling argument of §III-E.
+    * ``useful_bytes`` is the exact live KV: ``sum(lengths) × token_bytes``.
+
+    ``token_bytes`` is the per-token KV footprint across everything a decode
+    step reads (K and V, all layers, all KV heads).
+    """
+    lens = np.asarray(lengths, dtype=np.int64)
+    batch = int(lens.shape[0])
+    pages_touched = int(np.sum(-(-lens // page_size)))
+    useful = int(np.sum(lens)) * token_bytes
+    base = batch * pages_per_seq * page_size * token_bytes
+    pack = pages_touched * page_size * token_bytes
+    pack = int(np.ceil(pack / granule_bytes)) * granule_bytes if pack else 0
+    idx = pages_touched * index_bytes
+    idx = int(np.ceil(idx / granule_bytes)) * granule_bytes if idx else 0
+    return Traffic(useful, base, pack, 0, idx)

@@ -33,6 +33,7 @@ __all__ = [
     "IndirectStream",
     "elements_per_beat",
     "beats_for",
+    "page_table_streams",
 ]
 
 
@@ -158,6 +159,47 @@ class IndirectStream(StreamDescriptor):
 
     def element_offsets(self) -> np.ndarray:
         return self.base + np.asarray(self.indices, dtype=np.int64)
+
+
+def page_table_streams(
+    page_table,
+    lengths,
+    page_size: int,
+    token_bytes: int,
+    index_bits: int = 32,
+) -> Tuple["IndirectStream", ...]:
+    """Batched indirect-stream descriptors for a paged-KV decode step.
+
+    A paged KV cache is the serving-side instance of the paper's indirect
+    stream: the *element* is one physical KV page (``page_size`` tokens ×
+    ``token_bytes``), and the per-sequence page-table row is the memory-
+    resident index vector.  One :class:`IndirectStream` is returned per
+    sequence with a non-zero length, covering exactly the pages a decode
+    step touches (``ceil(len / page_size)`` leading table entries).
+
+    The scheduler builds these descriptors each step and derives both the
+    kernel operands (page ids / lengths) and the
+    :func:`repro.core.packing.paged_decode_traffic` accounting from them, so
+    the serving path and the Fig. 3 bus model share one source of truth.
+    """
+    pt = np.asarray(page_table)
+    lens = np.asarray(lengths)
+    elem_bits = page_size * token_bytes * 8
+    out = []
+    for row, ln in zip(pt, lens):
+        n = -(-int(ln) // page_size)
+        if n == 0:
+            continue
+        out.append(
+            IndirectStream(
+                base=0,
+                elem_bits=elem_bits,
+                count=n,
+                indices=np.asarray(row[:n], dtype=np.int64),
+                index_bits=index_bits,
+            )
+        )
+    return tuple(out)
 
 
 def word_addresses(

@@ -43,6 +43,7 @@ __all__ = [
     "spmv_ell",
     "flash_attention",
     "paged_decode_attention",
+    "paged_kv_append",
     "moe_dispatch",
     "moe_combine",
 ]
@@ -259,6 +260,47 @@ def paged_decode_attention(
         q, k_pages, v_pages, page_table, lengths,
         k_scale=k_scale, v_scale=v_scale, scale=scale, interpret=_interpret(),
     )
+
+
+def paged_kv_append(
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    page_table: jax.Array,
+    lengths: jax.Array,
+    active: Optional[jax.Array] = None,
+    impl: str = "pallas",
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Append one KV token per sequence into the paged pool.
+
+    ``impl='pallas'`` routes the writes through the packed indirect-scatter
+    converter kernel over the row-flattened pool (one indirect write burst
+    per K and V); ``impl='ref'`` is the plain XLA scatter oracle.  Both drop
+    inactive sequences by routing their index out of bounds.
+    """
+    if impl == "ref":
+        return ref.paged_kv_append(
+            k_pages, v_pages, k_new, v_new, page_table, lengths, active
+        )
+    p, page, kvh, d = k_pages.shape
+    slot = lengths // page
+    off = lengths % page
+    pids = jnp.take_along_axis(page_table, slot[:, None], axis=1)[:, 0]
+    flat_idx = (pids * page + off).astype(jnp.int32)
+    if active is None:
+        active = jnp.ones_like(lengths, dtype=bool)
+    # Inactive rows target the scratch row appended below, then get dropped.
+    flat_idx = jnp.where(active, flat_idx, p * page)
+
+    def write(pool, new):
+        flat = jnp.pad(pool.reshape(p * page, kvh * d), ((0, 1), (0, 0)))
+        flat = indirect_scatter(flat, new.reshape(-1, kvh * d), flat_idx, impl=impl)
+        return flat[:-1].reshape(p, page, kvh, d)
+
+    k_pages = write(k_pages, k_new)
+    v_pages = write(v_pages, v_new)
+    return k_pages, v_pages, lengths + active.astype(lengths.dtype)
 
 
 # ---------------------------------------------------------------------------

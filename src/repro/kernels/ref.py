@@ -178,6 +178,41 @@ def paged_decode_attention(
     return jnp.einsum("bhk,bhkd->bhd", w, vg.astype(jnp.float32)).astype(q.dtype)
 
 
+def paged_kv_append(
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    page_table: jax.Array,
+    lengths: jax.Array,
+    active: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Append one KV token per sequence into the paged pool (oracle).
+
+    The write side of the paged indirect stream: each sequence scatters its
+    new K/V row to ``(page_table[b, len_b // page], len_b % page)``.
+
+    k/v_pages:  (P, page, KVH, D) physical pool
+    k/v_new:    (B, KVH, D)       one new token per sequence
+    page_table: (B, pages_per_seq) int32; lengths: (B,) int32
+    active:     (B,) bool — inactive sequences write nothing and keep their
+                length (their scatter is routed out of bounds and dropped).
+
+    Returns (k_pages, v_pages, new_lengths).
+    """
+    p, page, _, _ = k_pages.shape
+    slot = lengths // page
+    off = lengths % page
+    pids = jnp.take_along_axis(page_table, slot[:, None], axis=1)[:, 0]
+    if active is None:
+        active = jnp.ones_like(lengths, dtype=bool)
+    # Route inactive writes past the pool; scatter mode='drop' discards them.
+    pids = jnp.where(active, pids, p)
+    k_pages = k_pages.at[pids, off].set(k_new, mode="drop")
+    v_pages = v_pages.at[pids, off].set(v_new, mode="drop")
+    return k_pages, v_pages, lengths + active.astype(lengths.dtype)
+
+
 # ---------------------------------------------------------------------------
 # MoE dispatch / combine (packed token routing)
 # ---------------------------------------------------------------------------

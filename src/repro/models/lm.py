@@ -350,6 +350,29 @@ def output_weight(params, cfg: ArchConfig):
 # ---------------------------------------------------------------------------
 
 
+@jax.custom_vjp
+def _diff_barrier(x):
+    """``optimization_barrier`` with an explicit gradient rule.
+
+    The jax pinned on this host (<0.5) has no differentiation rule for the
+    barrier primitive; newer releases differentiate it as identity.  The
+    custom rule barriers the cotangents too, so the backward loop keeps the
+    same anti-hoisting property the forward barrier exists for.
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+def _diff_barrier_fwd(x):
+    return jax.lax.optimization_barrier(x), None
+
+
+def _diff_barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+_diff_barrier.defvjp(_diff_barrier_fwd, _diff_barrier_bwd)
+
+
 def _scan_layers(params, x, cfg, rules, body):
     flags = jnp.asarray(global_flags(cfg), jnp.float32)
 
@@ -358,7 +381,7 @@ def _scan_layers(params, x, cfg, rules, body):
         # The barrier pins per-layer residual reads inside the backward loop:
         # without it XLA hoists the f32 upcast of the *entire* stacked
         # residual (L,B,S,D) out of the loop (observed: a 21 GB convert).
-        carry = jax.lax.optimization_barrier(carry)
+        carry = _diff_barrier(carry)
         return body(carry, lp, flag)
 
     if cfg.remat:

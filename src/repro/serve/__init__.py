@@ -1,2 +1,10 @@
-"""Serving: prefill/decode engine, contiguous + paged KV caches."""
-from .engine import PagedKVCache, ServeEngine
+"""Serving: prefill/decode engine, paged KV pool, continuous batching."""
+from .engine import OutOfPages, PagedKVCache, PagedLM, ServeEngine
+from .scheduler import (
+    Request,
+    RequestState,
+    Scheduler,
+    ServeStats,
+    StepRecord,
+    static_batch_generate,
+)

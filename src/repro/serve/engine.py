@@ -14,35 +14,49 @@ Two cache strategies:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+import functools
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.packing import pack_indirect, unpack_indirect
 from repro.kernels import ops as kops
 from repro.models import lm
 from repro.models.common import rms_norm
 from repro.parallel.sharding import ShardingRules
 
 
+class OutOfPages(RuntimeError):
+    """Raised when a page allocation cannot be satisfied from the free pool."""
+
+
 @dataclasses.dataclass
 class PagedKVCache:
-    """Physical page pool + per-sequence page tables (one per layer stack)."""
+    """Physical page pool + per-sequence page tables (one per layer stack).
+
+    ``free`` and ``mapped`` are *host-side* bookkeeping shared across the
+    functional ``dataclasses.replace`` copies: ``allocate``/``release`` mutate
+    them in place while returning a new dataclass with the updated device
+    arrays, so mid-flight sequence entry/exit (continuous batching) never
+    reshapes the pool.
+    """
 
     k_pages: jax.Array     # (L, P, page, KVH, hd)
     v_pages: jax.Array
     page_table: jax.Array  # (B, n_pages) physical ids
     lengths: jax.Array     # (B,)
     free: List[int]
+    mapped: Optional[np.ndarray] = None  # (B,) pages currently mapped per slot
 
     @classmethod
     def create(cls, cfg: ArchConfig, batch: int, max_len: int, page: int = 64,
-               tp: int = 1):
+               tp: int = 1, pool_pages: Optional[int] = None):
         q_heads, kv_heads = cfg.heads_for_tp(tp)
         n_pages_seq = max_len // page
-        pool = batch * n_pages_seq
+        pool = pool_pages if pool_pages is not None else batch * n_pages_seq
         dt = cfg.compute_dtype
         return cls(
             k_pages=jnp.zeros((cfg.n_layers, pool, page, kv_heads, cfg.hd), dt),
@@ -50,27 +64,230 @@ class PagedKVCache:
             page_table=jnp.zeros((batch, n_pages_seq), jnp.int32),
             lengths=jnp.zeros((batch,), jnp.int32),
             free=list(range(pool)),
+            mapped=np.zeros((batch,), np.int64),
         )
 
     @property
     def page_size(self) -> int:
         return self.k_pages.shape[2]
 
+    @property
+    def pages_per_seq(self) -> int:
+        return self.page_table.shape[1]
+
+    @property
+    def total_pages(self) -> int:
+        return self.k_pages.shape[1]
+
+    @property
+    def n_free(self) -> int:
+        return len(self.free)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def _mapped(self, seq: int) -> int:
+        if self.mapped is not None:
+            return int(self.mapped[seq])
+        ln = int(np.asarray(self.lengths)[seq])
+        return self.pages_for(ln)
+
     def allocate(self, seq: int, n_pages: int) -> "PagedKVCache":
-        """Host-side page allocation for one sequence (continuous batching)."""
+        """Map ``n_pages`` new physical pages after the slot's current ones."""
+        if n_pages > len(self.free):
+            raise OutOfPages(
+                f"seq {seq} needs {n_pages} pages, {len(self.free)} free"
+            )
+        start = self._mapped(seq)
+        if start + n_pages > self.pages_per_seq:
+            raise OutOfPages(
+                f"seq {seq}: {start}+{n_pages} pages exceeds the "
+                f"{self.pages_per_seq}-page table row"
+            )
         ids = [self.free.pop() for _ in range(n_pages)]
         pt = np.array(self.page_table)  # writable host copy
-        pt[seq, :n_pages] = ids
+        pt[seq, start:start + n_pages] = ids
+        if self.mapped is not None:
+            self.mapped[seq] = start + n_pages
         return dataclasses.replace(self, page_table=jnp.asarray(pt))
 
     def release(self, seq: int) -> "PagedKVCache":
-        pt = np.asarray(self.page_table)
-        ln = int(np.asarray(self.lengths)[seq])
-        used = (ln + self.page_size - 1) // self.page_size
+        """Return a slot's pages to the pool (sequence exit / eviction)."""
+        pt = np.array(self.page_table)
+        used = self._mapped(seq)
         self.free.extend(int(p) for p in pt[seq, :used])
+        pt[seq, :] = 0
         lengths = np.array(self.lengths)
         lengths[seq] = 0
-        return dataclasses.replace(self, lengths=jnp.asarray(lengths))
+        if self.mapped is not None:
+            self.mapped[seq] = 0
+        return dataclasses.replace(
+            self, page_table=jnp.asarray(pt), lengths=jnp.asarray(lengths)
+        )
+
+
+# ---------------------------------------------------------------------------
+# PagedLM: an attention-only LM that decodes straight out of the page pool
+# ---------------------------------------------------------------------------
+
+
+def _paged_lm_decode_step(params, tokens, k_pages, v_pages, page_table,
+                          lengths, active, *, h, kvh, hd, impl):
+    """One batched decode step against the paged pool.
+
+    tokens (B,) int32; active (B,) bool — inactive slots write nothing, keep
+    length 0 and produce zero attention.  Every array op is row-wise per
+    sequence, so slot placement / batch composition never changes a
+    sequence's bits.
+    """
+    n_layers = params["wq"].shape[0]
+    b = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)          # (B, d)
+    new_len = lengths + active.astype(lengths.dtype)
+    for l in range(n_layers):
+        q = (x @ params["wq"][l]).reshape(b, h, hd)
+        kn = (x @ params["wk"][l]).reshape(b, kvh, hd)
+        vn = (x @ params["wv"][l]).reshape(b, kvh, hd)
+        kp, vp, _ = kops.paged_kv_append(
+            k_pages[l], v_pages[l], kn, vn, page_table, lengths, active,
+            impl=impl,
+        )
+        k_pages = k_pages.at[l].set(kp)
+        v_pages = v_pages.at[l].set(vp)
+        attn = kops.paged_decode_attention(
+            q, kp, vp, page_table, new_len, impl=impl
+        )
+        x = x + attn.reshape(b, h * hd) @ params["wo"][l]
+    logits = x @ params["embed"].T                          # (B, vocab)
+    return logits, k_pages, v_pages, new_len
+
+
+def _paged_lm_prefill_chunk(params, tokens, count, seq, start, k_pages,
+                            v_pages, page_table, *, h, kvh, hd, page, impl):
+    """Process one fixed-size prompt chunk of one sequence.
+
+    tokens (C,) int32 (zero-padded past ``count``); ``start`` is the absolute
+    position of tokens[0].  KV rows are scattered into the pool through the
+    packed indirect write (:func:`repro.core.packing.unpack_indirect`), then
+    each layer's attention gathers the sequence's full table row
+    (:func:`repro.core.packing.pack_indirect`) — fixed shapes, so chunked
+    prefill is bitwise independent of scheduling interleave.  Returns the
+    last *real* token's logits plus the updated pools.
+    """
+    n_layers = params["wq"].shape[0]
+    c = tokens.shape[0]
+    p_tot = k_pages.shape[1]
+    n_pages = page_table.shape[1]
+    x = jnp.take(params["embed"], tokens, axis=0)          # (C, d)
+    row = jnp.take(page_table, seq, axis=0)                # (n_pages,)
+    pos = start + jnp.arange(c, dtype=jnp.int32)
+    valid = jnp.arange(c, dtype=jnp.int32) < count
+    flat_idx = jnp.take(row, pos // page) * page + pos % page
+    flat_idx = jnp.where(valid, flat_idx, p_tot * page)    # OOB → dropped
+    kv_pos = jnp.arange(n_pages * page, dtype=jnp.int32)
+    causal = kv_pos[None, :] <= pos[:, None]               # (C, S)
+    scale = 1.0 / np.sqrt(hd)
+    rep = h // kvh
+    for l in range(n_layers):
+        kn = (x @ params["wk"][l]).reshape(c, kvh, hd)
+        vn = (x @ params["wv"][l]).reshape(c, kvh, hd)
+        kp = unpack_indirect(
+            k_pages[l].reshape(p_tot * page, kvh, hd), kn, flat_idx
+        ).reshape(p_tot, page, kvh, hd)
+        vp = unpack_indirect(
+            v_pages[l].reshape(p_tot * page, kvh, hd), vn, flat_idx
+        ).reshape(p_tot, page, kvh, hd)
+        k_pages = k_pages.at[l].set(kp)
+        v_pages = v_pages.at[l].set(vp)
+        # Indirect read of the sequence's logical KV: (n_pages, page, KVH, hd)
+        kg = pack_indirect(kp, row).reshape(n_pages * page, kvh, hd)
+        vg = pack_indirect(vp, row).reshape(n_pages * page, kvh, hd)
+        kg = jnp.repeat(kg, rep, axis=1)                   # (S, h, hd)
+        vg = jnp.repeat(vg, rep, axis=1)
+        q = (x @ params["wq"][l]).reshape(c, h, hd)
+        s = jnp.einsum("chd,shd->chs", q, kg).astype(jnp.float32) * scale
+        s = jnp.where(causal[:, None, :], s, -jnp.inf)
+        w = jax.nn.softmax(s, axis=-1)
+        attn = jnp.einsum("chs,shd->chd", w, vg.astype(jnp.float32))
+        x = x + attn.astype(x.dtype).reshape(c, h * hd) @ params["wo"][l]
+    x_last = jax.lax.dynamic_index_in_dim(x, count - 1, 0, keepdims=False)
+    return x_last @ params["embed"].T, k_pages, v_pages
+
+
+class PagedLM:
+    """Attention-only LM serving straight out of a :class:`PagedKVCache`.
+
+    Deliberately minimal (tied embeddings, no norms/MLP, greedy-friendly
+    float32 math): every per-token computation is row-wise, so a sequence's
+    outputs depend only on its own tokens and pages — the property the
+    scheduler's static-batch equivalence guarantees rest on.  All heavy data
+    movement runs through the packed stream ops: ``paged_kv_append`` (the
+    indirect write converter) and ``paged_decode_attention`` (the indirect
+    read / scalar-prefetch kernel).
+    """
+
+    def __init__(self, cfg: ArchConfig, key: jax.Array, impl: str = "pallas"):
+        self.cfg = cfg
+        self.impl = impl
+        h, kvh = cfg.heads_for_tp(1)
+        self.h, self.kvh, self.hd = h, kvh, cfg.hd
+        d, L = cfg.d_model, cfg.n_layers
+        self._prefill_cache: Dict[int, Any] = {}
+        ks = jax.random.split(key, 5)
+        init = lambda k, *s: (jax.random.normal(k, s, jnp.float32)
+                              / np.sqrt(s[-2]))
+        self.params = {
+            "embed": jax.random.normal(ks[0], (cfg.vocab, d), jnp.float32) * 0.02,
+            "wq": init(ks[1], L, d, h * cfg.hd),
+            "wk": init(ks[2], L, d, kvh * cfg.hd),
+            "wv": init(ks[3], L, d, kvh * cfg.hd),
+            "wo": init(ks[4], L, h * cfg.hd, d),
+        }
+
+    @functools.cached_property
+    def _decode(self):
+        return jax.jit(functools.partial(
+            _paged_lm_decode_step, h=self.h, kvh=self.kvh, hd=self.hd,
+            impl=self.impl,
+        ))
+
+    def _prefill(self, page: int):
+        return jax.jit(functools.partial(
+            _paged_lm_prefill_chunk, h=self.h, kvh=self.kvh, hd=self.hd,
+            page=page, impl=self.impl,
+        ))
+
+    @functools.cached_property
+    def kv_token_bytes(self) -> int:
+        """Bytes a decode step reads per live KV token (K+V, all layers)."""
+        return 2 * self.cfg.n_layers * self.kvh * self.hd * 4
+
+    def decode_step(self, tokens, cache: PagedKVCache, active):
+        logits, kp, vp, new_len = self._decode(
+            self.params, tokens, cache.k_pages, cache.v_pages,
+            cache.page_table, cache.lengths, active,
+        )
+        cache = dataclasses.replace(
+            cache, k_pages=kp, v_pages=vp, lengths=new_len
+        )
+        return logits, cache
+
+    def prefill_chunk(self, tokens, count: int, seq: int, start: int,
+                      cache: PagedKVCache):
+        fn = self._prefill_cache.get(cache.page_size)
+        if fn is None:
+            fn = self._prefill_cache[cache.page_size] = self._prefill(
+                cache.page_size
+            )
+        logits, kp, vp = fn(
+            self.params, tokens, jnp.int32(count), jnp.int32(seq),
+            jnp.int32(start), cache.k_pages, cache.v_pages, cache.page_table,
+        )
+        cache = dataclasses.replace(
+            cache, k_pages=kp, v_pages=vp,
+            lengths=cache.lengths.at[seq].set(start + count),
+        )
+        return logits, cache
 
 
 class ServeEngine:

@@ -1,0 +1,434 @@
+"""Continuous-batching request scheduler over paged AXI-Pack streams.
+
+The serving-side payoff of the paper's indirect streams: a fixed physical
+page pool, per-sequence page tables as memory-resident index vectors, and a
+scheduler that keeps the pool full of *useful* pages.  Requests of arbitrary
+length enter and leave mid-flight; every decode step is one batched
+``paged_decode_attention`` launch whose operands — and whose BASE-vs-PACK
+traffic accounting — are derived from the same
+:func:`repro.core.streams.page_table_streams` descriptors.
+
+Scheduling policy (vLLM-shaped, deliberately simple and deterministic):
+
+* **Admission** — FIFO.  A waiting request is admitted when a batch slot is
+  free and the pool holds pages for its whole prompt plus one decode page of
+  headroom.  Prompt pages are allocated at admission; decode pages on demand.
+* **Prefill** — chunked: each scheduler step advances at most one request by
+  one fixed-size chunk, interleaved with a batched decode step for all
+  running requests (prefill never starves decode).
+* **Eviction** — when a decode step needs a page and the pool is empty, the
+  *youngest* resident request is preempted: its pages return to the pool and
+  it re-enters the queue front.  On re-admission its prompt is re-prefilled
+  and its previously generated tokens are *replayed through the decode path*
+  (inputs forced, outputs discarded), which rebuilds its KV bit-for-bit —
+  so eviction is invisible in the output stream.
+* **Hooks** — ``on_token(request, token)`` streams each newly generated
+  token; ``on_finish(request)`` fires at completion.
+
+Every decode step records a :class:`repro.core.packing.Traffic`: BASE is the
+padded contiguous cache a packing-oblivious server would stream, PACK is the
+mapped pages plus the near-memory page-table fetch — connecting serving
+throughput back to the Fig. 3 bus model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import time
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.packing import Traffic, paged_decode_traffic
+from repro.core.streams import IndirectStream, page_table_streams
+from .engine import OutOfPages, PagedKVCache, PagedLM
+
+__all__ = [
+    "Request",
+    "RequestState",
+    "Scheduler",
+    "StepRecord",
+    "ServeStats",
+    "static_batch_generate",
+]
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"
+    PREFILL = "prefill"
+    RUNNING = "running"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    ``generated`` includes every sampled token (the first comes from the
+    prompt's last prefill logits).  ``fed`` counts decode inputs consumed
+    since the last (re-)prefill: while ``fed + 1 < len(generated)`` the
+    request is replaying after an eviction and decode outputs are discarded.
+    """
+
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    on_token: Optional[Callable[["Request", int], None]] = None
+    on_finish: Optional[Callable[["Request"], None]] = None
+
+    state: RequestState = RequestState.WAITING
+    generated: List[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+    prefill_pos: int = 0      # prompt tokens already prefilled
+    fed: int = 0              # decode inputs consumed since (re-)prefill
+    n_evictions: int = 0
+    admit_order: int = -1
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new
+
+    @property
+    def replaying(self) -> bool:
+        return self.fed + 1 < len(self.generated)
+
+
+@dataclasses.dataclass
+class StepRecord:
+    """Per-scheduler-step accounting."""
+
+    step: int
+    kind: str                 # 'decode' | 'prefill'
+    n_active: int
+    new_tokens: int
+    traffic: Optional[Traffic]
+    streams: Tuple[IndirectStream, ...] = ()
+
+
+@dataclasses.dataclass
+class ServeStats:
+    records: List[StepRecord] = dataclasses.field(default_factory=list)
+    n_evictions: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def decode_steps(self) -> int:
+        return sum(1 for r in self.records if r.kind == "decode")
+
+    @property
+    def tokens(self) -> int:
+        return sum(r.new_tokens for r in self.records)
+
+    def _sum(self, attr: str) -> int:
+        return sum(
+            getattr(r.traffic, attr)
+            for r in self.records
+            if r.kind == "decode" and r.traffic is not None
+        )
+
+    @property
+    def base_bytes(self) -> int:
+        return self._sum("base_bytes")
+
+    @property
+    def pack_bytes(self) -> int:
+        return self._sum("pack_bytes") + self._sum("index_bus_bytes_pack")
+
+    @property
+    def useful_bytes(self) -> int:
+        return self._sum("useful_bytes")
+
+    @property
+    def base_efficiency(self) -> float:
+        return self.useful_bytes / self.base_bytes if self.base_bytes else 1.0
+
+    @property
+    def pack_efficiency(self) -> float:
+        return self.useful_bytes / self.pack_bytes if self.pack_bytes else 1.0
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens / self.wall_s if self.wall_s else 0.0
+
+
+class Scheduler:
+    """Continuous-batching scheduler driving a :class:`PagedLM`."""
+
+    def __init__(self, model: PagedLM, cache: PagedKVCache, chunk: int = 8):
+        self.model = model
+        self.cache = cache
+        self.chunk = chunk
+        self.queue: Deque[Request] = deque()
+        self.resident: List[Request] = []      # admission order
+        self.finished: Dict[int, Request] = {}
+        self.stats = ServeStats()
+        self._step = 0
+        self._admit_counter = 0
+        self._free_slots = list(range(cache.page_table.shape[0]))[::-1]
+
+    # -- public API ---------------------------------------------------------
+
+    @staticmethod
+    def _max_kv(request: Request) -> int:
+        # The last generated token is never fed back, so KV peaks one short.
+        return request.prompt_len + max(request.max_new - 1, 0)
+
+    def submit(self, request: Request) -> None:
+        worst = self.cache.pages_for(self._max_kv(request))
+        if worst > self.cache.total_pages:
+            raise OutOfPages(
+                f"request {request.rid} needs up to {worst} pages; the pool "
+                f"holds {self.cache.total_pages}"
+            )
+        if self._max_kv(request) > (
+            self.cache.pages_per_seq * self.cache.page_size
+        ):
+            raise ValueError(
+                f"request {request.rid} exceeds the per-sequence table row"
+            )
+        if request.max_new < 1:
+            raise ValueError(
+                f"request {request.rid}: max_new must be >= 1"
+            )
+        request.state = RequestState.WAITING
+        self.queue.append(request)
+
+    def run(self, max_steps: int = 100_000) -> Dict[int, List[int]]:
+        """Drive all submitted requests to completion."""
+        t0 = time.perf_counter()
+        while (self.queue or self.resident) and self._step < max_steps:
+            self.step()
+        self.stats.wall_s += time.perf_counter() - t0
+        if self.queue or self.resident:
+            raise RuntimeError(f"scheduler stalled after {max_steps} steps")
+        return {rid: r.generated for rid, r in sorted(self.finished.items())}
+
+    def step(self) -> None:
+        """One scheduler iteration: admit → one prefill chunk → one batched
+        decode step → retire."""
+        self._step += 1
+        self._admit()
+        self._prefill_one()
+        self._decode()
+        self._retire()
+
+    # -- admission ----------------------------------------------------------
+
+    def _admit(self) -> None:
+        while self.queue and self._free_slots:
+            r = self.queue[0]
+            # Pages for the whole prompt, plus one decode page of headroom
+            # when the first appended token will cross a page boundary.
+            need = self.cache.pages_for(
+                min(r.prompt_len + 1, self._max_kv(r))
+            )
+            if self.cache.n_free < need:
+                return
+            self.queue.popleft()
+            r.slot = self._free_slots.pop()
+            r.state = RequestState.PREFILL
+            r.prefill_pos = 0
+            r.fed = 0
+            r.admit_order = self._admit_counter
+            self._admit_counter += 1
+            self.cache = self.cache.allocate(
+                r.slot, self.cache.pages_for(r.prompt_len)
+            )
+            self.resident.append(r)
+
+    # -- prefill ------------------------------------------------------------
+
+    def _prefill_one(self) -> None:
+        pending = [r for r in self.resident if r.state is RequestState.PREFILL]
+        if not pending:
+            return
+        r = min(pending, key=lambda x: x.admit_order)
+        start = r.prefill_pos
+        count = min(self.chunk, r.prompt_len - start)
+        toks = np.zeros((self.chunk,), np.int32)
+        toks[:count] = r.prompt[start:start + count]
+        logits, self.cache = self.model.prefill_chunk(
+            jnp.asarray(toks), count, r.slot, start, self.cache
+        )
+        r.prefill_pos += count
+        new_tokens = 0
+        if r.prefill_pos == r.prompt_len:
+            r.state = RequestState.RUNNING
+            r.fed = 0
+            if not r.generated:  # fresh prefill; a replayed one already has it
+                tok = int(np.argmax(np.asarray(logits)[: self.model.cfg.vocab]))
+                r.generated.append(tok)
+                new_tokens = 1
+                if r.on_token:
+                    r.on_token(r, tok)
+        self.stats.records.append(StepRecord(
+            step=self._step, kind="prefill", n_active=1,
+            new_tokens=new_tokens,
+            traffic=self._traffic_for(slots=[r.slot]),
+        ))
+
+    # -- decode -------------------------------------------------------------
+
+    def _decode(self) -> None:
+        running = [
+            r for r in self.resident
+            if r.state is RequestState.RUNNING and not r.done
+        ]
+        if not running:
+            return
+        running = self._grow_pages(running)
+        if not running:
+            return
+        b = self.cache.page_table.shape[0]
+        tokens = np.zeros((b,), np.int32)
+        active = np.zeros((b,), bool)
+        for r in running:
+            tokens[r.slot] = r.generated[r.fed]
+            active[r.slot] = True
+
+        # Batched indirect-stream descriptors over exactly what this step
+        # reads (post-append lengths of the decoding slots): source of truth
+        # for both the traffic accounting and the Fig. 3 connection.
+        step_lens = np.zeros((b,), np.int64)
+        lens_now = np.asarray(self.cache.lengths)
+        for r in running:
+            step_lens[r.slot] = int(lens_now[r.slot]) + 1
+        streams = page_table_streams(
+            self.cache.page_table, step_lens,
+            self.cache.page_size, self.model.kv_token_bytes,
+        )
+        traffic = paged_decode_traffic(
+            step_lens[step_lens > 0], self.cache.page_size,
+            self.cache.pages_per_seq, self.model.kv_token_bytes,
+        )
+
+        logits, self.cache = self.model.decode_step(
+            jnp.asarray(tokens), self.cache, jnp.asarray(active)
+        )
+        out = np.argmax(
+            np.asarray(logits)[:, : self.model.cfg.vocab], axis=-1
+        ).astype(np.int32)
+
+        new_tokens = 0
+        for r in running:
+            r.fed += 1
+            if r.fed < len(r.generated):
+                continue  # replay after eviction: output already known
+            tok = int(out[r.slot])
+            r.generated.append(tok)
+            new_tokens += 1
+            if r.on_token:
+                r.on_token(r, tok)
+        self.stats.records.append(StepRecord(
+            step=self._step, kind="decode", n_active=len(running),
+            new_tokens=new_tokens, traffic=traffic, streams=streams,
+        ))
+
+    def _grow_pages(self, running: List[Request]) -> List[Request]:
+        """Allocate a page for every running request whose next token lands on
+        a page boundary, evicting the youngest resident when the pool runs
+        dry (the requester itself defers when it *is* the youngest).
+        Returns the requests that still run this step."""
+        lengths = np.asarray(self.cache.lengths)
+        for r in sorted(running, key=lambda x: x.admit_order):
+            if r.state is not RequestState.RUNNING:
+                continue  # evicted below by an older request's allocation
+            ln = int(lengths[r.slot])
+            if ln < self.cache._mapped(r.slot) * self.cache.page_size:
+                continue  # headroom left in the last mapped page
+            while (r.state is RequestState.RUNNING
+                   and self.cache.n_free < 1):
+                victim = max(self.resident, key=lambda x: x.admit_order)
+                if victim is r and len(self.resident) == 1:
+                    # Unreachable given the submit() worst-case guard.
+                    raise OutOfPages(
+                        "page pool exhausted with a single resident request"
+                    )
+                self._evict(victim)  # may be r itself: it defers, not others
+            if r.state is RequestState.RUNNING:
+                self.cache = self.cache.allocate(r.slot, 1)
+        return [r for r in running if r.state is RequestState.RUNNING]
+
+    def _evict(self, r: Request) -> None:
+        self.cache = self.cache.release(r.slot)
+        self.resident.remove(r)
+        self._free_slots.append(r.slot)
+        r.slot = -1
+        r.state = RequestState.WAITING
+        r.prefill_pos = 0
+        r.fed = 0
+        r.n_evictions += 1
+        self.stats.n_evictions += 1
+        self.queue.appendleft(r)  # re-admit first: FIFO fairness preserved
+
+    # -- retirement ---------------------------------------------------------
+
+    def _retire(self) -> None:
+        for r in [x for x in self.resident if x.done]:
+            self.cache = self.cache.release(r.slot)
+            self.resident.remove(r)
+            self._free_slots.append(r.slot)
+            r.slot = -1
+            r.state = RequestState.FINISHED
+            self.finished[r.rid] = r
+            if r.on_finish:
+                r.on_finish(r)
+
+    # -- accounting ---------------------------------------------------------
+
+    def _traffic_for(self, slots: Sequence[int]) -> Traffic:
+        lens = np.asarray(self.cache.lengths)[list(slots)]
+        return paged_decode_traffic(
+            lens, self.cache.page_size, self.cache.pages_per_seq,
+            self.model.kv_token_bytes,
+        )
+
+
+def static_batch_generate(
+    model: PagedLM,
+    cache: PagedKVCache,
+    prompts: Sequence[np.ndarray],
+    max_new: int,
+    chunk: int = 8,
+) -> Dict[int, List[int]]:
+    """Reference: all prompts prefilled up front, then one static decode batch.
+
+    Uses the exact same jitted prefill/decode functions as the scheduler, so
+    scheduled continuous batching must reproduce these tokens bit-for-bit
+    (asserted in tests/test_scheduler.py).  Requires a pool large enough to
+    hold every sequence at once.
+    """
+    b = cache.page_table.shape[0]
+    assert len(prompts) <= b, "static batch needs one slot per prompt"
+    out: Dict[int, List[int]] = {}
+    for i, prompt in enumerate(prompts):
+        cache = cache.allocate(i, cache.pages_for(len(prompt) + max_new))
+        toks: List[int] = []
+        for start in range(0, len(prompt), chunk):
+            count = min(chunk, len(prompt) - start)
+            buf = np.zeros((chunk,), np.int32)
+            buf[:count] = np.asarray(prompt)[start:start + count]
+            logits, cache = model.prefill_chunk(
+                jnp.asarray(buf), count, i, start, cache
+            )
+        toks.append(int(np.argmax(np.asarray(logits)[: model.cfg.vocab])))
+        out[i] = toks
+    for _ in range(max_new - 1):
+        tokens = np.zeros((b,), np.int32)
+        active = np.zeros((b,), bool)
+        for i in range(len(prompts)):
+            tokens[i] = out[i][-1]
+            active[i] = True
+        logits, cache = model.decode_step(
+            jnp.asarray(tokens), cache, jnp.asarray(active)
+        )
+        nxt = np.argmax(np.asarray(logits)[:, : model.cfg.vocab], axis=-1)
+        for i in range(len(prompts)):
+            out[i].append(int(nxt[i]))
+    return out

@@ -1,0 +1,115 @@
+"""Deterministic stand-in for the ``hypothesis`` package.
+
+The property tests in this repo use a small slice of hypothesis
+(``@given``/``@settings`` plus the ``integers``/``sampled_from``/``booleans``/
+``floats`` strategies).  When the real package is installed it is always
+preferred (see ``conftest.py``); this stub only exists so that ``pytest -x -q``
+collects and runs in minimal environments (e.g. CI images without optional
+dev dependencies).
+
+Semantics: each ``@given`` test runs a fixed number of deterministically
+pseudo-random examples (default 5, override with
+``REPRO_STUB_MAX_EXAMPLES``).  Draw #0 probes the strategy's lower bound /
+first choice so boundary cases are always covered; later draws are seeded by
+the test's qualified name, so failures reproduce run-to-run.  There is no
+shrinking — a failing example is reported as a plain pytest failure with the
+drawn kwargs visible in the traceback.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import os
+import random
+import types
+import zlib
+
+__version__ = "0.0-repro-stub"
+
+_MAX_EXAMPLES = int(os.environ.get("REPRO_STUB_MAX_EXAMPLES", "5"))
+
+
+class _Strategy:
+    """A draw function plus an explicit boundary example (draw #0)."""
+
+    def __init__(self, draw, boundary):
+        self._draw = draw
+        self._boundary = boundary
+
+    def example(self, rng: random.Random, index: int):
+        if index == 0:
+            return self._boundary()
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda r: r.randint(min_value, max_value), lambda: min_value)
+
+
+def sampled_from(elements) -> _Strategy:
+    elems = list(elements)
+    return _Strategy(lambda r: elems[r.randrange(len(elems))], lambda: elems[0])
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda r: bool(r.getrandbits(1)), lambda: False)
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0, **_kw) -> _Strategy:
+    return _Strategy(lambda r: r.uniform(min_value, max_value), lambda: min_value)
+
+
+def just(value) -> _Strategy:
+    return _Strategy(lambda r: value, lambda: value)
+
+
+def lists(elem: _Strategy, min_size: int = 0, max_size: int = 8) -> _Strategy:
+    def draw(r):
+        n = r.randint(min_size, max_size)
+        return [elem.example(r, 1) for _ in range(n)]
+
+    return _Strategy(draw, lambda: [elem.example(random.Random(0), 0)] * min_size)
+
+
+strategies = types.SimpleNamespace(
+    integers=integers,
+    sampled_from=sampled_from,
+    booleans=booleans,
+    floats=floats,
+    just=just,
+    lists=lists,
+)
+
+
+def settings(max_examples: int | None = None, deadline=None, **_kw):
+    """Record ``max_examples``; the stub caps it at REPRO_STUB_MAX_EXAMPLES."""
+
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            requested = getattr(wrapper, "_stub_max_examples", None)
+            n = min(requested or _MAX_EXAMPLES, _MAX_EXAMPLES)
+            base_seed = zlib.crc32(fn.__qualname__.encode())
+            for i in range(n):
+                rng = random.Random(base_seed * 1000003 + i)
+                drawn = {
+                    name: strat.example(rng, i)
+                    for name, strat in sorted(strats.items())
+                }
+                fn(*args, **{**kwargs, **drawn})
+
+        # pytest must not mistake the drawn arguments for fixtures: hide the
+        # wrapped signature (functools.wraps exposes it via __wrapped__).
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return deco
