@@ -5,11 +5,16 @@ Prints ``name,us_per_call,derived`` CSV rows per the harness contract
 Fig. 3a-e, Fig. 5a-c, the continuous-batching serving sweep, and (when
 dry-run artifacts exist) the roofline table.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+``--json PATH`` additionally writes the serving sweep as machine-readable
+JSON (tokens/s, steps/s, PACK/BASE efficiency per batch size) so the perf
+trajectory can be tracked run-over-run (CI uploads it as an artifact).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--json BENCH_serving.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -17,6 +22,8 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the serving sweep as JSON to PATH")
     args = ap.parse_args()
     t0 = time.time()
 
@@ -94,12 +101,33 @@ def main() -> None:
     # ---- Serving: continuous batching over paged streams --------------
     from .serving import serving_rows
     print("\n# Serving: decode tokens/s vs batch; per-step PACK vs BASE bytes")
-    for row in serving_rows(quick=args.quick):
+    srows = serving_rows(quick=args.quick)
+    for row in srows:
         print(f"serving,b={row['batch']},tokens_s={row['tokens_per_s']:.0f},"
+              f"steps_s={row['steps_per_s']:.0f},"
               f"decode_steps={row['decode_steps']},"
               f"evictions={row['evictions']},"
               f"pack_KiB={row['pack_kib']:.0f},base_KiB={row['base_kib']:.0f},"
               f"pack_eff={row['pack_eff']:.1%},base_eff={row['base_eff']:.1%}")
+    if args.json:
+        payload = {
+            "benchmark": "serving",
+            "quick": bool(args.quick),
+            "rows": [{
+                "batch": r["batch"],
+                "tokens": r["tokens"],
+                "wall_s": r["wall_s"],
+                "tokens_per_s": r["tokens_per_s"],
+                "steps_per_s": r["steps_per_s"],
+                "decode_steps": r["decode_steps"],
+                "evictions": r["evictions"],
+                "pack_efficiency": r["pack_eff"],
+                "base_efficiency": r["base_eff"],
+            } for r in srows],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# serving sweep written to {args.json}")
 
     # ---- Roofline (if dry-run artifacts exist) ------------------------
     try:

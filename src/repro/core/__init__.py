@@ -23,6 +23,7 @@ from .packing import (
     pack_indirect,
     pack_strided,
     paged_decode_traffic,
+    paged_prefill_traffic,
     strided_traffic,
     unpack_indirect,
     unpack_strided,

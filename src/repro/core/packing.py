@@ -26,6 +26,7 @@ __all__ = [
     "strided_traffic",
     "indirect_traffic",
     "paged_decode_traffic",
+    "paged_prefill_traffic",
 ]
 
 
@@ -169,5 +170,47 @@ def paged_decode_traffic(
     pack = pages_touched * page_size * token_bytes
     pack = int(np.ceil(pack / granule_bytes)) * granule_bytes if pack else 0
     idx = pages_touched * index_bytes
+    idx = int(np.ceil(idx / granule_bytes)) * granule_bytes if idx else 0
+    return Traffic(useful, base, pack, 0, idx)
+
+
+def paged_prefill_traffic(
+    starts,
+    counts,
+    page_size: int,
+    pages_per_seq: int,
+    token_bytes: int,
+    index_bytes: int = 4,
+    granule_bytes: int = 32,
+) -> Traffic:
+    """Traffic of one batched chunked-prefill step, BASE vs PACK.
+
+    Each sequence writes ``counts[r]`` KV rows at positions ``starts[r]..``
+    and its attention re-reads the context built so far.
+
+    * **BASE** streams the full padded row per sequence for the context read
+      (``pages_per_seq × page_size`` tokens) plus one transaction granule per
+      written row — the packing-oblivious scatter.
+    * **PACK** reads only the pages covering ``starts + counts`` tokens,
+      writes only the pages the chunk touches (whole pages, the stream's
+      packing granule), and fetches the corresponding page-table entries
+      near memory (``index_bus_bytes_pack``).
+    * ``useful_bytes`` is the live context read plus the rows written.
+    """
+    st = np.asarray(starts, dtype=np.int64)
+    ct = np.asarray(counts, dtype=np.int64)
+    live = st + ct
+    ctx_pages = int(np.sum(-(-live // page_size)))
+    # Pages the chunk writes: positions st .. st+ct-1 inclusive.
+    chunk_pages = int(np.sum(
+        np.where(ct > 0, (live - 1) // page_size - st // page_size + 1, 0)
+    ))
+    useful = int(np.sum(live) + np.sum(ct)) * token_bytes
+    batch = int(np.count_nonzero(ct))
+    base = (batch * pages_per_seq * page_size * token_bytes
+            + int(np.sum(ct)) * granule_bytes)
+    pack = (ctx_pages + chunk_pages) * page_size * token_bytes
+    pack = int(np.ceil(pack / granule_bytes)) * granule_bytes if pack else 0
+    idx = (ctx_pages + chunk_pages) * index_bytes
     idx = int(np.ceil(idx / granule_bytes)) * granule_bytes if idx else 0
     return Traffic(useful, base, pack, 0, idx)

@@ -44,6 +44,7 @@ __all__ = [
     "flash_attention",
     "paged_decode_attention",
     "paged_kv_append",
+    "paged_kv_write_chunk",
     "moe_dispatch",
     "moe_combine",
 ]
@@ -301,6 +302,69 @@ def paged_kv_append(
     k_pages = write(k_pages, k_new)
     v_pages = write(v_pages, v_new)
     return k_pages, v_pages, lengths + active.astype(lengths.dtype)
+
+
+def paged_kv_write_chunk(
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    rows: jax.Array,
+    starts: jax.Array,
+    counts: jax.Array,
+    impl: str = "pallas",
+) -> Tuple[jax.Array, jax.Array]:
+    """Batched chunked-prefill write, bounded by the pages the chunk touches.
+
+    ``impl='ref'`` is the full-pool scatter oracle.  ``impl='pallas'`` never
+    materializes an O(pool) intermediate: each sequence's chunk spans at most
+    ``W = ceil(C/page) + 1`` pages, so the converter path gathers those W
+    pages per sequence (one packed indirect read), scatters the chunk's rows
+    into the gathered window, and writes the touched pages back (one packed
+    indirect write) — R·W pages of traffic instead of the whole pool.
+    Window slots that cover no valid token are routed out of bounds on the
+    way back so a stale copy can never clobber another sequence's page.
+    """
+    if impl == "ref":
+        return ref.paged_kv_write_chunk(
+            k_pages, v_pages, k_new, v_new, rows, starts, counts
+        )
+    p, page, kvh, d = k_pages.shape
+    r, c = k_new.shape[:2]
+    n_pages = rows.shape[1]
+    w = -(-c // page) + 1
+    p_lo = starts // page                                         # (R,)
+    lp = p_lo[:, None] + jnp.arange(w, dtype=jnp.int32)           # (R, W)
+    pids = jnp.take_along_axis(
+        rows, jnp.clip(lp, 0, n_pages - 1), axis=1
+    )                                                             # (R, W)
+    # A window slot is real iff it covers >= 1 valid token of its sequence.
+    p_hi = (starts + jnp.maximum(counts - 1, 0)) // page
+    real = (lp <= p_hi[:, None]) & (counts[:, None] > 0) & (lp < n_pages)
+    # Local scatter index of token (r, c) inside the (R, W, page) window.
+    pos = starts[:, None] + jnp.arange(c, dtype=jnp.int32)        # (R, C)
+    valid = jnp.arange(c, dtype=jnp.int32)[None, :] < counts[:, None]
+    wp = pos // page - p_lo[:, None]                              # (R, C)
+    loc = (jnp.arange(r, dtype=jnp.int32)[:, None] * w + wp) * page + pos % page
+    loc = jnp.where(valid, loc, r * w * page).reshape(-1)
+
+    def write(pool, new):
+        flat = pool.reshape(p, page * kvh * d)
+        win = indirect_gather(
+            flat, jnp.clip(pids, 0, p - 1).reshape(-1), impl=impl
+        )                                                         # (R*W, ...)
+        win = jnp.pad(
+            win.reshape(r * w * page, kvh * d), ((0, 1), (0, 0))
+        )
+        win = indirect_scatter(win, new.reshape(-1, kvh * d), loc, impl=impl)
+        win = win[:-1].reshape(r * w, page * kvh * d)
+        out = jnp.pad(flat, ((0, 1), (0, 0)))
+        out = indirect_scatter(
+            out, win, jnp.where(real, pids, p).reshape(-1), impl=impl
+        )
+        return out[:-1].reshape(p, page, kvh, d)
+
+    return write(k_pages, k_new), write(v_pages, v_new)
 
 
 # ---------------------------------------------------------------------------

@@ -31,6 +31,7 @@ def _paged_body(
     # scalar prefetch
     page_table_ref,   # (B * n_pages,) physical page ids
     lengths_ref,      # (B,) current KV length per sequence
+    used_ref,         # (B,) mapped-page count per sequence (ceil(len/page))
     # inputs
     q_ref,            # (1, H, D)
     k_ref,            # (1, page, KVH, D)
@@ -123,6 +124,16 @@ def paged_decode_attention_kernel(
     k/v_pages:  (P, page, KVH, D) — int8 when ``k_scale``/``v_scale`` given
     page_table: (B, n_pages) int32 physical page ids (pad with 0)
     lengths:    (B,) int32 valid KV length per sequence
+
+    The page walk is *length-adaptive*: per-sequence mapped-page counts ride
+    the scalar-prefetch channel alongside the table, and the BlockSpec index
+    map clamps every grid step past a sequence's last mapped page to that
+    last page.  Revisited blocks are not re-fetched, so fully-unmapped tail
+    pages issue no HBM→VMEM DMAs (their compute is already skipped by the
+    ``j * page < len`` predicate) — short sequences in a long-table batch
+    stream only what they actually own.  The batch grid dimension is
+    declared ``parallel`` (sequences are independent); only the page walk is
+    ``arbitrary`` (it carries the running softmax state).
     """
     b, h, d = q.shape
     p_tot, page, kvh, _ = k_pages.shape
@@ -133,20 +144,26 @@ def paged_decode_attention_kernel(
 
     flat_table = page_table.reshape(-1).astype(jnp.int32)
     lengths = lengths.astype(jnp.int32)
+    used = jnp.maximum(-(-lengths // page), 1).astype(jnp.int32)
 
-    def table_idx(b_, j, pt_ref, len_ref):
-        return (pt_ref[b_ * n_pages + j], 0, 0, 0)
+    def table_idx(b_, j, pt_ref, len_ref, used_ref):
+        jj = jnp.minimum(j, used_ref[b_] - 1)
+        return (pt_ref[b_ * n_pages + jj], 0, 0, 0)
+
+    def scale_idx(b_, j, pt_ref, len_ref, used_ref):
+        jj = jnp.minimum(j, used_ref[b_] - 1)
+        return (pt_ref[b_ * n_pages + jj], 0, 0)
 
     in_specs = [
-        pl.BlockSpec((1, h, d), lambda b_, j, pt, ln: (b_, 0, 0)),
+        pl.BlockSpec((1, h, d), lambda b_, j, pt, ln, us: (b_, 0, 0)),
         pl.BlockSpec((1, page, kvh, d), table_idx),
         pl.BlockSpec((1, page, kvh, d), table_idx),
     ]
     args = [q, k_pages, v_pages]
     if quantized:
         in_specs += [
-            pl.BlockSpec((1, page, kvh), lambda b_, j, pt, ln: (pt[b_ * n_pages + j], 0, 0)),
-            pl.BlockSpec((1, page, kvh), lambda b_, j, pt, ln: (pt[b_ * n_pages + j], 0, 0)),
+            pl.BlockSpec((1, page, kvh), scale_idx),
+            pl.BlockSpec((1, page, kvh), scale_idx),
         ]
         args += [k_scale, v_scale]
 
@@ -164,10 +181,10 @@ def paged_decode_attention_kernel(
         body = functools.partial(_drop_scale_refs, body)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(b, n_pages),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, h, d), lambda b_, j, pt, ln: (b_, 0, 0)),
+        out_specs=pl.BlockSpec((1, h, d), lambda b_, j, pt, ln, us: (b_, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((h, 128), jnp.float32),
             pltpu.VMEM((h, 128), jnp.float32),
@@ -178,9 +195,14 @@ def paged_decode_attention_kernel(
         body,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
         interpret=interpret,
-    )(flat_table, lengths, *args)
+    )(flat_table, lengths, used, *args)
 
 
-def _drop_scale_refs(body, pt, ln, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
-    return body(pt, ln, q_ref, k_ref, v_ref, None, None, o_ref, m_ref, l_ref, acc_ref)
+def _drop_scale_refs(body, pt, ln, us, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                     acc_ref):
+    return body(pt, ln, us, q_ref, k_ref, v_ref, None, None, o_ref, m_ref,
+                l_ref, acc_ref)

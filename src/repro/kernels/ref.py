@@ -213,6 +213,45 @@ def paged_kv_append(
     return k_pages, v_pages, lengths + active.astype(lengths.dtype)
 
 
+def paged_kv_write_chunk(
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    rows: jax.Array,
+    starts: jax.Array,
+    counts: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Scatter one prefill chunk per sequence into the paged pool (oracle).
+
+    The batched write side of chunked prefill: sequence ``r`` writes its
+    ``counts[r]`` leading rows of ``k_new[r]``/``v_new[r]`` at absolute
+    positions ``starts[r] + c`` through its page-table row ``rows[r]``.
+
+    k/v_pages: (P, page, KVH, D) physical pool
+    k/v_new:   (R, C, KVH, D)    chunk of new tokens per sequence
+    rows:      (R, n_pages) int32 page-table rows; starts/counts: (R,) int32
+
+    Rows with ``counts[r] == 0`` write nothing (their scatters are routed out
+    of bounds and dropped), so the caller can pad the batch freely.
+    """
+    p, page, kvh, d = k_pages.shape
+    r, c = k_new.shape[:2]
+    n_pages = rows.shape[1]
+    pos = starts[:, None] + jnp.arange(c, dtype=jnp.int32)          # (R, C)
+    valid = jnp.arange(c, dtype=jnp.int32)[None, :] < counts[:, None]
+    pids = jnp.take_along_axis(
+        rows, jnp.clip(pos // page, 0, n_pages - 1), axis=1
+    )                                                                # (R, C)
+    flat = jnp.where(valid, pids * page + pos % page, p * page)
+    flat = flat.reshape(-1)
+    kf = k_pages.reshape(p * page, kvh, d)
+    vf = v_pages.reshape(p * page, kvh, d)
+    kf = kf.at[flat].set(k_new.reshape(-1, kvh, d), mode="drop")
+    vf = vf.at[flat].set(v_new.reshape(-1, kvh, d), mode="drop")
+    return kf.reshape(p, page, kvh, d), vf.reshape(p, page, kvh, d)
+
+
 # ---------------------------------------------------------------------------
 # MoE dispatch / combine (packed token routing)
 # ---------------------------------------------------------------------------

@@ -10,11 +10,23 @@ Two cache strategies:
   ids → direct HBM page DMAs).  Used by examples/serve_decode.py and the
   batching tests; pages admit continuous batching (sequences of different
   lengths enter/leave without reshaping the pool).
+
+The paged path is built as a *device-resident fast path*: the page pools are
+donated into every jitted call (``donate_argnums``) so they update in place
+instead of being copied per step, greedy sampling happens on device, and
+``decode_steps`` fuses ``n`` decode iterations into one ``lax.scan`` launch
+that feeds its own samples back — the host only sees tokens when the
+scheduler reaches a scheduling boundary (admission, page growth,
+retirement).  Host-side shadow state (``lengths_host``/``page_table_host``)
+lets all bookkeeping and traffic accounting run without a single
+device→host sync on the hot path.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
+import warnings
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -22,26 +34,44 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core.packing import pack_indirect, unpack_indirect
+from repro.core.packing import pack_indirect
 from repro.kernels import ops as kops
 from repro.models import lm
 from repro.models.common import rms_norm
 from repro.parallel.sharding import ShardingRules
 
-
 class OutOfPages(RuntimeError):
     """Raised when a page allocation cannot be satisfied from the free pool."""
+
+
+@contextlib.contextmanager
+def _donation_noop_ok():
+    """Silence jax's donation-unusable warning for one library dispatch.
+
+    Pool donation is a deliberate no-op on CPU backends and the fast path is
+    identical either way, so the warning is noise *for these calls only* —
+    the suppression is scoped with ``catch_warnings`` so user code's own
+    donation diagnostics (where a failed donation is a real memory bug) are
+    never swallowed."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable"
+        )
+        yield
 
 
 @dataclasses.dataclass
 class PagedKVCache:
     """Physical page pool + per-sequence page tables (one per layer stack).
 
-    ``free`` and ``mapped`` are *host-side* bookkeeping shared across the
-    functional ``dataclasses.replace`` copies: ``allocate``/``release`` mutate
-    them in place while returning a new dataclass with the updated device
-    arrays, so mid-flight sequence entry/exit (continuous batching) never
-    reshapes the pool.
+    The dataclass is *functional*: ``allocate``/``release`` copy every piece
+    of host bookkeeping they touch before writing (``free``, ``mapped``,
+    ``lengths_host``, ``page_table_host``) and return a new cache, so a
+    retained older cache object is never corrupted by later calls.
+
+    ``lengths_host``/``page_table_host`` are host-side shadows of the device
+    arrays, maintained by :class:`PagedLM` and ``allocate``/``release``; the
+    scheduler reads them instead of syncing device state on the hot path.
     """
 
     k_pages: jax.Array     # (L, P, page, KVH, hd)
@@ -50,6 +80,8 @@ class PagedKVCache:
     lengths: jax.Array     # (B,)
     free: List[int]
     mapped: Optional[np.ndarray] = None  # (B,) pages currently mapped per slot
+    lengths_host: Optional[np.ndarray] = None      # (B,) int32 shadow
+    page_table_host: Optional[np.ndarray] = None   # (B, n_pages) int32 shadow
 
     @classmethod
     def create(cls, cfg: ArchConfig, batch: int, max_len: int, page: int = 64,
@@ -65,6 +97,8 @@ class PagedKVCache:
             lengths=jnp.zeros((batch,), jnp.int32),
             free=list(range(pool)),
             mapped=np.zeros((batch,), np.int64),
+            lengths_host=np.zeros((batch,), np.int32),
+            page_table_host=np.zeros((batch, n_pages_seq), np.int32),
         )
 
     @property
@@ -89,8 +123,15 @@ class PagedKVCache:
     def _mapped(self, seq: int) -> int:
         if self.mapped is not None:
             return int(self.mapped[seq])
+        if self.lengths_host is not None:
+            return self.pages_for(int(self.lengths_host[seq]))
         ln = int(np.asarray(self.lengths)[seq])
         return self.pages_for(ln)
+
+    def _host_table(self) -> np.ndarray:
+        if self.page_table_host is not None:
+            return np.array(self.page_table_host)
+        return np.array(self.page_table)
 
     def allocate(self, seq: int, n_pages: int) -> "PagedKVCache":
         """Map ``n_pages`` new physical pages after the slot's current ones."""
@@ -104,25 +145,60 @@ class PagedKVCache:
                 f"seq {seq}: {start}+{n_pages} pages exceeds the "
                 f"{self.pages_per_seq}-page table row"
             )
-        ids = [self.free.pop() for _ in range(n_pages)]
-        pt = np.array(self.page_table)  # writable host copy
+        free = list(self.free)
+        ids = [free.pop() for _ in range(n_pages)]
+        pt = self._host_table()
         pt[seq, start:start + n_pages] = ids
-        if self.mapped is not None:
-            self.mapped[seq] = start + n_pages
-        return dataclasses.replace(self, page_table=jnp.asarray(pt))
+        mapped = None if self.mapped is None else self.mapped.copy()
+        if mapped is not None:
+            mapped[seq] = start + n_pages
+        return dataclasses.replace(
+            self, page_table=jnp.asarray(pt), page_table_host=pt,
+            free=free, mapped=mapped,
+        )
+
+    def trim(self, seq: int, keep_pages: int) -> "PagedKVCache":
+        """Unmap a slot's pages beyond ``keep_pages`` back to the free pool.
+
+        Only meaningful for pages past the written content (lookahead
+        over-provisioning): trimmed pages hold no live KV, so remapping them
+        later on demand is loss-free.
+        """
+        used = self._mapped(seq)
+        if keep_pages >= used:
+            return self
+        pt = self._host_table()
+        free = list(self.free)
+        free.extend(int(p) for p in pt[seq, keep_pages:used])
+        pt[seq, keep_pages:used] = 0
+        mapped = None if self.mapped is None else self.mapped.copy()
+        if mapped is not None:
+            mapped[seq] = keep_pages
+        return dataclasses.replace(
+            self, page_table=jnp.asarray(pt), page_table_host=pt,
+            free=free, mapped=mapped,
+        )
 
     def release(self, seq: int) -> "PagedKVCache":
         """Return a slot's pages to the pool (sequence exit / eviction)."""
-        pt = np.array(self.page_table)
+        pt = self._host_table()
         used = self._mapped(seq)
-        self.free.extend(int(p) for p in pt[seq, :used])
+        free = list(self.free)
+        free.extend(int(p) for p in pt[seq, :used])
         pt[seq, :] = 0
-        lengths = np.array(self.lengths)
+        if self.lengths_host is not None:
+            lengths = self.lengths_host.copy()
+        else:
+            lengths = np.array(self.lengths)
         lengths[seq] = 0
-        if self.mapped is not None:
-            self.mapped[seq] = 0
+        mapped = None if self.mapped is None else self.mapped.copy()
+        if mapped is not None:
+            mapped[seq] = 0
         return dataclasses.replace(
-            self, page_table=jnp.asarray(pt), lengths=jnp.asarray(lengths)
+            self, page_table=jnp.asarray(pt), page_table_host=pt,
+            lengths=jnp.asarray(lengths),
+            lengths_host=lengths if self.lengths_host is not None else None,
+            free=free, mapped=mapped,
         )
 
 
@@ -139,11 +215,18 @@ def _paged_lm_decode_step(params, tokens, k_pages, v_pages, page_table,
     length 0 and produce zero attention.  Every array op is row-wise per
     sequence, so slot placement / batch composition never changes a
     sequence's bits.
+
+    The per-layer pool updates are collected and stacked once at the end
+    (rather than chained through ``k_pages.at[l].set``), so the trace holds
+    one full-pool value instead of L intermediates; with the pools donated
+    at the jit boundary XLA aliases that single value back into the input
+    buffers — an in-place update of the resident pool.
     """
     n_layers = params["wq"].shape[0]
     b = tokens.shape[0]
     x = jnp.take(params["embed"], tokens, axis=0)          # (B, d)
     new_len = lengths + active.astype(lengths.dtype)
+    kps, vps = [], []
     for l in range(n_layers):
         q = (x @ params["wq"][l]).reshape(b, h, hd)
         kn = (x @ params["wk"][l]).reshape(b, kvh, hd)
@@ -152,66 +235,105 @@ def _paged_lm_decode_step(params, tokens, k_pages, v_pages, page_table,
             k_pages[l], v_pages[l], kn, vn, page_table, lengths, active,
             impl=impl,
         )
-        k_pages = k_pages.at[l].set(kp)
-        v_pages = v_pages.at[l].set(vp)
+        kps.append(kp)
+        vps.append(vp)
         attn = kops.paged_decode_attention(
             q, kp, vp, page_table, new_len, impl=impl
         )
         x = x + attn.reshape(b, h * hd) @ params["wo"][l]
     logits = x @ params["embed"].T                          # (B, vocab)
-    return logits, k_pages, v_pages, new_len
+    return logits, jnp.stack(kps), jnp.stack(vps), new_len
 
 
-def _paged_lm_prefill_chunk(params, tokens, count, seq, start, k_pages,
-                            v_pages, page_table, *, h, kvh, hd, page, impl):
-    """Process one fixed-size prompt chunk of one sequence.
+def _paged_lm_decode_steps(params, tokens, k_pages, v_pages, page_table,
+                           lengths, active, *, n, vocab, h, kvh, hd, impl):
+    """``n`` fused decode steps with on-device greedy sampling.
 
-    tokens (C,) int32 (zero-padded past ``count``); ``start`` is the absolute
-    position of tokens[0].  KV rows are scattered into the pool through the
-    packed indirect write (:func:`repro.core.packing.unpack_indirect`), then
-    each layer's attention gathers the sequence's full table row
-    (:func:`repro.core.packing.pack_indirect`) — fixed shapes, so chunked
-    prefill is bitwise independent of scheduling interleave.  Returns the
-    last *real* token's logits plus the updated pools.
+    One ``lax.scan`` launch: each step runs the single-step core, argmaxes
+    its own logits on device, and feeds the sample back as the next input —
+    no logits or lengths ever cross to the host.  Returns the (n, B) token
+    matrix, the final feed token (``toks[-1]``, returned from inside the
+    graph so chained launches never slice on the host), and the updated
+    pools/lengths; bitwise identical to ``n`` sequential
+    :func:`_paged_lm_decode_step` calls with host-side argmax.
+    """
+
+    def body(carry, _):
+        toks, kp, vp, lens = carry
+        logits, kp, vp, lens = _paged_lm_decode_step(
+            params, toks, kp, vp, page_table, lens, active,
+            h=h, kvh=kvh, hd=hd, impl=impl,
+        )
+        nxt = jnp.argmax(logits[:, :vocab], axis=-1).astype(jnp.int32)
+        return (nxt, kp, vp, lens), nxt
+
+    (last, k_pages, v_pages, lengths), toks = jax.lax.scan(
+        body, (tokens, k_pages, v_pages, lengths), None, length=n
+    )
+    return toks, last, k_pages, v_pages, lengths
+
+
+def _paged_lm_prefill_batch(params, tokens, counts, seqs, starts, k_pages,
+                            v_pages, page_table, lengths, *, h, kvh, hd,
+                            page, ctx_pages, impl):
+    """Advance every pending sequence by one prompt chunk, in one call.
+
+    tokens (R, C) int32 (row r zero-padded past ``counts[r]``); ``seqs`` maps
+    rows to batch slots and ``starts`` gives the absolute position of each
+    row's tokens[0].  Rows with ``counts[r] == 0`` are padding and touch
+    nothing.
+
+    KV rows are scattered through the chunk-bounded indirect write
+    (:func:`repro.kernels.ops.paged_kv_write_chunk` — R·W pages of traffic,
+    never the whole pool), and each layer's attention gathers only the
+    leading ``ctx_pages`` table entries per sequence (the pages that can
+    hold context for this chunk) instead of the full table row.  Returns the
+    last *real* token's logits per row plus the updated pools.
     """
     n_layers = params["wq"].shape[0]
-    c = tokens.shape[0]
-    p_tot = k_pages.shape[1]
-    n_pages = page_table.shape[1]
-    x = jnp.take(params["embed"], tokens, axis=0)          # (C, d)
-    row = jnp.take(page_table, seq, axis=0)                # (n_pages,)
-    pos = start + jnp.arange(c, dtype=jnp.int32)
-    valid = jnp.arange(c, dtype=jnp.int32) < count
-    flat_idx = jnp.take(row, pos // page) * page + pos % page
-    flat_idx = jnp.where(valid, flat_idx, p_tot * page)    # OOB → dropped
-    kv_pos = jnp.arange(n_pages * page, dtype=jnp.int32)
-    causal = kv_pos[None, :] <= pos[:, None]               # (C, S)
+    r, c = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)          # (R, C, d)
+    rows = jnp.take(page_table, seqs, axis=0)              # (R, n_pages)
+    pos = starts[:, None] + jnp.arange(c, dtype=jnp.int32)  # (R, C)
+    ctx_rows = rows[:, :ctx_pages]
+    kv_pos = jnp.arange(ctx_pages * page, dtype=jnp.int32)
+    causal = kv_pos[None, None, :] <= pos[:, :, None]      # (R, C, S)
     scale = 1.0 / np.sqrt(hd)
     rep = h // kvh
+    kps, vps = [], []
     for l in range(n_layers):
-        kn = (x @ params["wk"][l]).reshape(c, kvh, hd)
-        vn = (x @ params["wv"][l]).reshape(c, kvh, hd)
-        kp = unpack_indirect(
-            k_pages[l].reshape(p_tot * page, kvh, hd), kn, flat_idx
-        ).reshape(p_tot, page, kvh, hd)
-        vp = unpack_indirect(
-            v_pages[l].reshape(p_tot * page, kvh, hd), vn, flat_idx
-        ).reshape(p_tot, page, kvh, hd)
-        k_pages = k_pages.at[l].set(kp)
-        v_pages = v_pages.at[l].set(vp)
-        # Indirect read of the sequence's logical KV: (n_pages, page, KVH, hd)
-        kg = pack_indirect(kp, row).reshape(n_pages * page, kvh, hd)
-        vg = pack_indirect(vp, row).reshape(n_pages * page, kvh, hd)
-        kg = jnp.repeat(kg, rep, axis=1)                   # (S, h, hd)
-        vg = jnp.repeat(vg, rep, axis=1)
-        q = (x @ params["wq"][l]).reshape(c, h, hd)
-        s = jnp.einsum("chd,shd->chs", q, kg).astype(jnp.float32) * scale
-        s = jnp.where(causal[:, None, :], s, -jnp.inf)
+        kn = (x @ params["wk"][l]).reshape(r, c, kvh, hd)
+        vn = (x @ params["wv"][l]).reshape(r, c, kvh, hd)
+        kp, vp = kops.paged_kv_write_chunk(
+            k_pages[l], v_pages[l], kn, vn, rows, starts, counts, impl=impl
+        )
+        kps.append(kp)
+        vps.append(vp)
+        # Indirect read of each row's bounded context: (R, ctx·page, KVH, hd)
+        kg = pack_indirect(kp, ctx_rows.reshape(-1)).reshape(
+            r, ctx_pages * page, kvh, hd
+        )
+        vg = pack_indirect(vp, ctx_rows.reshape(-1)).reshape(
+            r, ctx_pages * page, kvh, hd
+        )
+        kg = jnp.repeat(kg, rep, axis=2)                   # (R, S, h, hd)
+        vg = jnp.repeat(vg, rep, axis=2)
+        q = (x @ params["wq"][l]).reshape(r, c, h, hd)
+        s = jnp.einsum("rchd,rshd->rchs", q, kg).astype(jnp.float32) * scale
+        s = jnp.where(causal[:, :, None, :], s, -jnp.inf)
         w = jax.nn.softmax(s, axis=-1)
-        attn = jnp.einsum("chs,shd->chd", w, vg.astype(jnp.float32))
-        x = x + attn.astype(x.dtype).reshape(c, h * hd) @ params["wo"][l]
-    x_last = jax.lax.dynamic_index_in_dim(x, count - 1, 0, keepdims=False)
-    return x_last @ params["embed"].T, k_pages, v_pages
+        attn = jnp.einsum("rchs,rshd->rchd", w, vg.astype(jnp.float32))
+        x = x + attn.astype(x.dtype).reshape(r, c, h * hd) @ params["wo"][l]
+    last = jnp.take_along_axis(
+        x, jnp.clip(counts - 1, 0, c - 1)[:, None, None].astype(jnp.int32),
+        axis=1,
+    )[:, 0]                                                # (R, d)
+    # Advance each real row's slot length in-graph (padding rows dropped).
+    b = lengths.shape[0]
+    new_len = lengths.at[jnp.where(counts > 0, seqs, b)].set(
+        (starts + counts).astype(lengths.dtype), mode="drop"
+    )
+    return last @ params["embed"].T, jnp.stack(kps), jnp.stack(vps), new_len
 
 
 class PagedLM:
@@ -221,9 +343,13 @@ class PagedLM:
     float32 math): every per-token computation is row-wise, so a sequence's
     outputs depend only on its own tokens and pages — the property the
     scheduler's static-batch equivalence guarantees rest on.  All heavy data
-    movement runs through the packed stream ops: ``paged_kv_append`` (the
-    indirect write converter) and ``paged_decode_attention`` (the indirect
-    read / scalar-prefetch kernel).
+    movement runs through the packed stream ops: ``paged_kv_append`` /
+    ``paged_kv_write_chunk`` (the indirect write converters) and
+    ``paged_decode_attention`` (the indirect read / scalar-prefetch kernel).
+
+    Every jitted entry point donates the page pools, and the wrappers keep
+    the cache's host shadows (``lengths_host``) in step arithmetically, so
+    calling code never needs to read device state back.
     """
 
     def __init__(self, cfg: ArchConfig, key: jax.Array, impl: str = "pallas"):
@@ -232,7 +358,7 @@ class PagedLM:
         h, kvh = cfg.heads_for_tp(1)
         self.h, self.kvh, self.hd = h, kvh, cfg.hd
         d, L = cfg.d_model, cfg.n_layers
-        self._prefill_cache: Dict[int, Any] = {}
+        self._prefill_cache: Dict[Any, Any] = {}
         ks = jax.random.split(key, 5)
         init = lambda k, *s: (jax.random.normal(k, s, jnp.float32)
                               / np.sqrt(s[-2]))
@@ -249,45 +375,155 @@ class PagedLM:
         return jax.jit(functools.partial(
             _paged_lm_decode_step, h=self.h, kvh=self.kvh, hd=self.hd,
             impl=self.impl,
-        ))
+        ), donate_argnums=(2, 3))
 
-    def _prefill(self, page: int):
+    @functools.cached_property
+    def _decode_many(self):
         return jax.jit(functools.partial(
-            _paged_lm_prefill_chunk, h=self.h, kvh=self.kvh, hd=self.hd,
-            page=page, impl=self.impl,
-        ))
+            _paged_lm_decode_steps, vocab=self.cfg.vocab, h=self.h,
+            kvh=self.kvh, hd=self.hd, impl=self.impl,
+        ), static_argnames=("n",), donate_argnums=(2, 3))
+
+    def _prefill(self, page: int, ctx_pages: int):
+        return jax.jit(functools.partial(
+            _paged_lm_prefill_batch, h=self.h, kvh=self.kvh, hd=self.hd,
+            page=page, ctx_pages=ctx_pages, impl=self.impl,
+        ), donate_argnums=(5, 6))
 
     @functools.cached_property
     def kv_token_bytes(self) -> int:
         """Bytes a decode step reads per live KV token (K+V, all layers)."""
         return 2 * self.cfg.n_layers * self.kvh * self.hd * 4
 
+    # -- decode --------------------------------------------------------------
+
+    def _shift_lengths(self, cache: PagedKVCache, active, steps: int):
+        if cache.lengths_host is None:
+            return None
+        return (cache.lengths_host
+                + steps * np.asarray(active).astype(np.int32))
+
     def decode_step(self, tokens, cache: PagedKVCache, active):
-        logits, kp, vp, new_len = self._decode(
-            self.params, tokens, cache.k_pages, cache.v_pages,
-            cache.page_table, cache.lengths, active,
-        )
+        """One decode step; returns (logits, cache).  Pools are donated —
+        the passed-in cache's device arrays must not be reused."""
+        act_host = np.asarray(active)
+        with _donation_noop_ok():
+            logits, kp, vp, new_len = self._decode(
+                self.params, jnp.asarray(tokens), cache.k_pages,
+                cache.v_pages, cache.page_table, cache.lengths,
+                jnp.asarray(active),
+            )
         cache = dataclasses.replace(
-            cache, k_pages=kp, v_pages=vp, lengths=new_len
+            cache, k_pages=kp, v_pages=vp, lengths=new_len,
+            lengths_host=self._shift_lengths(cache, act_host, 1),
+        )
+        return logits, cache
+
+    def decode_steps(self, tokens, cache: PagedKVCache, active, n: int):
+        """``n`` fused decode steps with device-side greedy sampling.
+
+        Returns (tokens (n, B) — a *device* array, synced only when the
+        caller reads it — and the updated cache).  Bitwise equivalent to
+        ``n`` sequential ``decode_step`` + host argmax iterations.
+        """
+        act_host = np.asarray(active)
+        with _donation_noop_ok():
+            toks, _, kp, vp, new_len = self._decode_many(
+                self.params, jnp.asarray(tokens), cache.k_pages,
+                cache.v_pages, cache.page_table, cache.lengths,
+                jnp.asarray(active), n=n,
+            )
+        cache = dataclasses.replace(
+            cache, k_pages=kp, v_pages=vp, lengths=new_len,
+            lengths_host=self._shift_lengths(cache, act_host, n),
+        )
+        return toks, cache
+
+    def decode_upto(self, tokens, cache: PagedKVCache, active, n: int):
+        """Fused decode of exactly ``n`` steps as a chain of pow2 scans.
+
+        Power-of-two scan lengths keep the jit cache to O(log n) entries
+        while the feed token, pools, and lengths stay on device between
+        chunks; the (n, B) token matrix crosses to the host exactly once,
+        here.  Returns (tokens (n, B) np.ndarray, cache).
+        """
+        act_host = np.asarray(active)
+        act_dev = jnp.asarray(active)
+        feed = jnp.asarray(tokens)
+        kp, vp = cache.k_pages, cache.v_pages
+        lens = cache.lengths
+        parts = []
+        rem = n
+        with _donation_noop_ok():
+            while rem:
+                m = 1 << (rem.bit_length() - 1)
+                toks, feed, kp, vp, lens = self._decode_many(
+                    self.params, feed, kp, vp, cache.page_table, lens,
+                    act_dev, n=m,
+                )
+                parts.append(toks)
+                rem -= m
+        out = np.concatenate([np.asarray(t) for t in parts], axis=0)  # sync
+        cache = dataclasses.replace(
+            cache, k_pages=kp, v_pages=vp, lengths=lens,
+            lengths_host=self._shift_lengths(cache, act_host, n),
+        )
+        return out, cache
+
+    # -- prefill -------------------------------------------------------------
+
+    def prefill_batch(self, tokens: np.ndarray, counts: np.ndarray,
+                      slots: np.ndarray, starts: np.ndarray,
+                      cache: PagedKVCache):
+        """Advance all pending sequences by one chunk; returns (logits, cache).
+
+        tokens (R, C) int32; counts/slots/starts (R,) host arrays.  Rows
+        with ``counts == 0`` are padding.  The attention context is bounded
+        by the mapped pages the furthest row needs, bucketed to the next
+        power of two so the jit cache stays small.
+        """
+        counts = np.asarray(counts, np.int32)
+        starts = np.asarray(starts, np.int32)
+        slots = np.asarray(slots, np.int32)
+        page = cache.page_size
+        need = int(max(1, -(-int((starts + counts).max()) // page)))
+        ctx = 1
+        while ctx < need:
+            ctx *= 2
+        ctx = min(ctx, cache.pages_per_seq)
+        key = (page, ctx)
+        fn = self._prefill_cache.get(key)
+        if fn is None:
+            fn = self._prefill_cache[key] = self._prefill(page, ctx)
+        with _donation_noop_ok():
+            logits, kp, vp, new_len = fn(
+                self.params, jnp.asarray(tokens), jnp.asarray(counts),
+                jnp.asarray(slots), jnp.asarray(starts),
+                cache.k_pages, cache.v_pages, cache.page_table,
+                cache.lengths,
+            )
+        real = counts > 0
+        lens_host = cache.lengths_host
+        if lens_host is not None:
+            lens_host = lens_host.copy()
+            lens_host[slots[real]] = (starts + counts)[real]
+        cache = dataclasses.replace(
+            cache, k_pages=kp, v_pages=vp, lengths=new_len,
+            lengths_host=lens_host,
         )
         return logits, cache
 
     def prefill_chunk(self, tokens, count: int, seq: int, start: int,
                       cache: PagedKVCache):
-        fn = self._prefill_cache.get(cache.page_size)
-        if fn is None:
-            fn = self._prefill_cache[cache.page_size] = self._prefill(
-                cache.page_size
-            )
-        logits, kp, vp = fn(
-            self.params, tokens, jnp.int32(count), jnp.int32(seq),
-            jnp.int32(start), cache.k_pages, cache.v_pages, cache.page_table,
+        """Single-sequence chunked prefill (the R=1 row of the batched path)."""
+        logits, cache = self.prefill_batch(
+            np.asarray(tokens, np.int32)[None, :],
+            np.asarray([count], np.int32),
+            np.asarray([seq], np.int32),
+            np.asarray([start], np.int32),
+            cache,
         )
-        cache = dataclasses.replace(
-            cache, k_pages=kp, v_pages=vp,
-            lengths=cache.lengths.at[seq].set(start + count),
-        )
-        return logits, cache
+        return logits[0], cache
 
 
 class ServeEngine:

@@ -13,15 +13,32 @@ Scheduling policy (vLLM-shaped, deliberately simple and deterministic):
 * **Admission** — FIFO.  A waiting request is admitted when a batch slot is
   free and the pool holds pages for its whole prompt plus one decode page of
   headroom.  Prompt pages are allocated at admission; decode pages on demand.
-* **Prefill** — chunked: each scheduler step advances at most one request by
-  one fixed-size chunk, interleaved with a batched decode step for all
-  running requests (prefill never starves decode).
+* **Prefill** — chunked and batched: each scheduler step advances *every*
+  pending request by one fixed-size chunk in a single
+  ``PagedLM.prefill_batch`` call, interleaved with decode (prefill never
+  starves decode and vice versa).
+* **Decode fast path** — between scheduling boundaries (admission, prefill,
+  page growth, retirement) every decode quantity is known on the host, so
+  the scheduler *fuses* all steps up to the next boundary into device-
+  resident ``PagedLM.decode_steps`` launches (greedy sampling on device,
+  pools donated in place) and syncs the token matrix back exactly once per
+  boundary.  When nothing can be admitted or prefilled first, pages for
+  each request's remaining generation are preallocated from the free pool
+  (lookahead never evicts), so page growth stops being a boundary.
+  Per-step ``page_table_streams``/``paged_decode_traffic`` records are
+  reconstructed from host-side shadow lengths, so the PACK-vs-BASE
+  accounting is unchanged from the step-at-a-time path.
 * **Eviction** — when a decode step needs a page and the pool is empty, the
   *youngest* resident request is preempted: its pages return to the pool and
   it re-enters the queue front.  On re-admission its prompt is re-prefilled
-  and its previously generated tokens are *replayed through the decode path*
-  (inputs forced, outputs discarded), which rebuilds its KV bit-for-bit —
-  so eviction is invisible in the output stream.
+  and its previously generated tokens are *replayed through the decode
+  path* (outputs discarded), which rebuilds its KV bit-for-bit — so
+  eviction is invisible in the output stream.  Replay inputs are forced
+  from the recorded tokens at every fused-launch boundary; *within* a
+  fused launch the device feeds its own greedy argmax, which matches the
+  recorded tokens because the model is deterministic and row-wise (the
+  property the equivalence tests assert) — a future nondeterministic
+  kernel would have to cap fusion during replay.
 * **Hooks** — ``on_token(request, token)`` streams each newly generated
   token; ``on_finish(request)`` fires at completion.
 
@@ -41,7 +58,11 @@ from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.packing import Traffic, paged_decode_traffic
+from repro.core.packing import (
+    Traffic,
+    paged_decode_traffic,
+    paged_prefill_traffic,
+)
 from repro.core.streams import IndirectStream, page_table_streams
 from .engine import OutOfPages, PagedKVCache, PagedLM
 
@@ -101,7 +122,7 @@ class Request:
 
 @dataclasses.dataclass
 class StepRecord:
-    """Per-scheduler-step accounting."""
+    """Per-model-step accounting (a fused launch emits one record per step)."""
 
     step: int
     kind: str                 # 'decode' | 'prefill'
@@ -210,15 +231,43 @@ class Scheduler:
         return {rid: r.generated for rid, r in sorted(self.finished.items())}
 
     def step(self) -> None:
-        """One scheduler iteration: admit → one prefill chunk → one batched
-        decode step → retire."""
+        """One scheduler iteration: admit → one batched prefill chunk → fused
+        decode to the next scheduling boundary → retire."""
         self._step += 1
         self._admit()
-        self._prefill_one()
+        self._prefill_all()
         self._decode()
         self._retire()
 
+    # -- host shadow state ---------------------------------------------------
+
+    def _lengths(self) -> np.ndarray:
+        """Per-slot KV lengths without touching the device."""
+        if self.cache.lengths_host is not None:
+            return self.cache.lengths_host
+        return np.asarray(self.cache.lengths)
+
     # -- admission ----------------------------------------------------------
+
+    def _reclaim_lookahead(self, need: int) -> None:
+        """Trim residents' unwritten lookahead pages back to the free pool.
+
+        Lookahead prealloc (see ``_grow_pages``) may have mapped pages for
+        generations that have not happened yet; those pages hold no KV, so
+        reclaiming them for an admission is loss-free — the residents simply
+        fall back to on-demand growth.  Trims youngest-first, down to each
+        request's written content (prompt pages for a request still in
+        prefill)."""
+        for r in sorted(self.resident, key=lambda x: -x.admit_order):
+            if self.cache.n_free >= need:
+                return
+            if r.state is RequestState.PREFILL:
+                floor = self.cache.pages_for(r.prompt_len)
+            else:
+                floor = self.cache.pages_for(
+                    int(self._lengths()[r.slot])
+                )
+            self.cache = self.cache.trim(r.slot, floor)
 
     def _admit(self) -> None:
         while self.queue and self._free_slots:
@@ -228,6 +277,8 @@ class Scheduler:
             need = self.cache.pages_for(
                 min(r.prompt_len + 1, self._max_kv(r))
             )
+            if self.cache.n_free < need:
+                self._reclaim_lookahead(need)
             if self.cache.n_free < need:
                 return
             self.queue.popleft()
@@ -244,36 +295,77 @@ class Scheduler:
 
     # -- prefill ------------------------------------------------------------
 
-    def _prefill_one(self) -> None:
+    def _prefill_all(self) -> None:
+        """One chunk for *every* pending request, in one batched call."""
         pending = [r for r in self.resident if r.state is RequestState.PREFILL]
         if not pending:
             return
-        r = min(pending, key=lambda x: x.admit_order)
-        start = r.prefill_pos
-        count = min(self.chunk, r.prompt_len - start)
-        toks = np.zeros((self.chunk,), np.int32)
-        toks[:count] = r.prompt[start:start + count]
-        logits, self.cache = self.model.prefill_chunk(
-            jnp.asarray(toks), count, r.slot, start, self.cache
+        pending.sort(key=lambda x: x.admit_order)
+        # Rows pow2-bucketed to the pending count (not padded to the full
+        # batch): compute scales with actual prefill work while the jit
+        # cache stays O(log batch).
+        b = self.cache.page_table.shape[0]
+        rows = min(1 << max(len(pending) - 1, 0).bit_length(), b)
+        toks = np.zeros((rows, self.chunk), np.int32)
+        counts = np.zeros((rows,), np.int32)
+        slots = np.zeros((rows,), np.int32)
+        starts = np.zeros((rows,), np.int32)
+        for i, r in enumerate(pending):
+            start = r.prefill_pos
+            count = min(self.chunk, r.prompt_len - start)
+            toks[i, :count] = r.prompt[start:start + count]
+            counts[i], slots[i], starts[i] = count, r.slot, start
+        logits, self.cache = self.model.prefill_batch(
+            toks, counts, slots, starts, self.cache
         )
-        r.prefill_pos += count
         new_tokens = 0
-        if r.prefill_pos == r.prompt_len:
-            r.state = RequestState.RUNNING
-            r.fed = 0
-            if not r.generated:  # fresh prefill; a replayed one already has it
-                tok = int(np.argmax(np.asarray(logits)[: self.model.cfg.vocab]))
+        completed = []
+        for i, r in enumerate(pending):
+            r.prefill_pos += int(counts[i])
+            if r.prefill_pos == r.prompt_len:
+                r.state = RequestState.RUNNING
+                r.fed = 0
+                if not r.generated:  # fresh prefill; a replay already has it
+                    completed.append((i, r))
+        if completed:
+            lg = np.asarray(logits)  # host sync: admission boundary only
+            for i, r in completed:
+                tok = int(np.argmax(lg[i, : self.model.cfg.vocab]))
                 r.generated.append(tok)
-                new_tokens = 1
+                new_tokens += 1
                 if r.on_token:
                     r.on_token(r, tok)
         self.stats.records.append(StepRecord(
-            step=self._step, kind="prefill", n_active=1,
+            step=self._step, kind="prefill", n_active=len(pending),
             new_tokens=new_tokens,
-            traffic=self._traffic_for(slots=[r.slot]),
+            traffic=paged_prefill_traffic(
+                starts[: len(pending)], counts[: len(pending)],
+                self.cache.page_size, self.cache.pages_per_seq,
+                self.model.kv_token_bytes,
+            ),
         ))
 
     # -- decode -------------------------------------------------------------
+
+    def _fused_steps(self, running: List[Request]) -> int:
+        """Decode steps until the next scheduling boundary.
+
+        Between boundaries nothing the scheduler decides on can change: the
+        running set is fixed (retirement is a boundary), page tables are
+        fixed (growth is a boundary), and admission cannot unblock (slots
+        and pages free up only at boundaries).  While any resident is still
+        prefilling we keep single steps so prefill stays interleaved.
+        """
+        if any(r.state is RequestState.PREFILL for r in self.resident):
+            return 1
+        lens = self._lengths()
+        page = self.cache.page_size
+        to_done = min(r.max_new - 1 - r.fed for r in running)
+        to_growth = min(
+            self.cache._mapped(r.slot) * page - int(lens[r.slot])
+            for r in running
+        )
+        return max(1, min(to_done, to_growth))
 
     def _decode(self) -> None:
         running = [
@@ -291,51 +383,53 @@ class Scheduler:
         for r in running:
             tokens[r.slot] = r.generated[r.fed]
             active[r.slot] = True
+        lens0 = self._lengths().copy()
+        table = (np.array(self.cache.page_table_host)
+                 if self.cache.page_table_host is not None
+                 else np.asarray(self.cache.page_table))
 
-        # Batched indirect-stream descriptors over exactly what this step
-        # reads (post-append lengths of the decoding slots): source of truth
-        # for both the traffic accounting and the Fig. 3 connection.
-        step_lens = np.zeros((b,), np.int64)
-        lens_now = np.asarray(self.cache.lengths)
-        for r in running:
-            step_lens[r.slot] = int(lens_now[r.slot]) + 1
-        streams = page_table_streams(
-            self.cache.page_table, step_lens,
-            self.cache.page_size, self.model.kv_token_bytes,
-        )
-        traffic = paged_decode_traffic(
-            step_lens[step_lens > 0], self.cache.page_size,
-            self.cache.pages_per_seq, self.model.kv_token_bytes,
+        # Fuse up to the boundary: device-resident scan chunks, one token
+        # sync at the end (the scheduling boundary).
+        n = self._fused_steps(running)
+        out, self.cache = self.model.decode_upto(
+            tokens, self.cache, active, n
         )
 
-        logits, self.cache = self.model.decode_step(
-            jnp.asarray(tokens), self.cache, jnp.asarray(active)
-        )
-        out = np.argmax(
-            np.asarray(logits)[:, : self.model.cfg.vocab], axis=-1
-        ).astype(np.int32)
-
-        new_tokens = 0
-        for r in running:
-            r.fed += 1
-            if r.fed < len(r.generated):
-                continue  # replay after eviction: output already known
-            tok = int(out[r.slot])
-            r.generated.append(tok)
-            new_tokens += 1
-            if r.on_token:
-                r.on_token(r, tok)
-        self.stats.records.append(StepRecord(
-            step=self._step, kind="decode", n_active=len(running),
-            new_tokens=new_tokens, traffic=traffic, streams=streams,
-        ))
+        # Per-step records from host shadow lengths: identical accounting to
+        # the step-at-a-time path.
+        for s in range(n):
+            step_lens = np.zeros((b,), np.int64)
+            for r in running:
+                step_lens[r.slot] = int(lens0[r.slot]) + s + 1
+            streams = page_table_streams(
+                table, step_lens,
+                self.cache.page_size, self.model.kv_token_bytes,
+            )
+            traffic = paged_decode_traffic(
+                step_lens[step_lens > 0], self.cache.page_size,
+                self.cache.pages_per_seq, self.model.kv_token_bytes,
+            )
+            new_tokens = 0
+            for r in running:
+                r.fed += 1
+                if r.fed < len(r.generated):
+                    continue  # replay after eviction: output already known
+                tok = int(out[s, r.slot])
+                r.generated.append(tok)
+                new_tokens += 1
+                if r.on_token:
+                    r.on_token(r, tok)
+            self.stats.records.append(StepRecord(
+                step=self._step, kind="decode", n_active=len(running),
+                new_tokens=new_tokens, traffic=traffic, streams=streams,
+            ))
 
     def _grow_pages(self, running: List[Request]) -> List[Request]:
         """Allocate a page for every running request whose next token lands on
         a page boundary, evicting the youngest resident when the pool runs
         dry (the requester itself defers when it *is* the youngest).
         Returns the requests that still run this step."""
-        lengths = np.asarray(self.cache.lengths)
+        lengths = self._lengths()
         for r in sorted(running, key=lambda x: x.admit_order):
             if r.state is not RequestState.RUNNING:
                 continue  # evicted below by an older request's allocation
@@ -353,7 +447,30 @@ class Scheduler:
                 self._evict(victim)  # may be r itself: it defers, not others
             if r.state is RequestState.RUNNING:
                 self.cache = self.cache.allocate(r.slot, 1)
-        return [r for r in running if r.state is RequestState.RUNNING]
+        still = [r for r in running if r.state is RequestState.RUNNING]
+        # Opportunistic lookahead: when nothing can be admitted or prefilled
+        # before the next boundary AND the free pool covers *every* running
+        # request's full remaining generation, map those pages up front, so
+        # page growth stops being a scheduling boundary and decode fuses
+        # through.  The all-or-nothing condition means lookahead can never
+        # starve a peer's imminent on-demand growth (no extra evictions
+        # versus the on-demand policy); under pool pressure it simply stays
+        # off and behaviour is exactly the on-demand path.
+        if not self.queue and not any(
+            x.state is RequestState.PREFILL for x in self.resident
+        ):
+            lens = self._lengths()
+            wants = {
+                r.rid: (self.cache.pages_for(
+                    int(lens[r.slot]) + (r.max_new - 1 - r.fed)
+                ) - self.cache._mapped(r.slot))
+                for r in still
+            }
+            if sum(max(w, 0) for w in wants.values()) <= self.cache.n_free:
+                for r in sorted(still, key=lambda x: x.admit_order):
+                    if wants[r.rid] > 0:
+                        self.cache = self.cache.allocate(r.slot, wants[r.rid])
+        return still
 
     def _evict(self, r: Request) -> None:
         self.cache = self.cache.release(r.slot)
@@ -380,15 +497,6 @@ class Scheduler:
             if r.on_finish:
                 r.on_finish(r)
 
-    # -- accounting ---------------------------------------------------------
-
-    def _traffic_for(self, slots: Sequence[int]) -> Traffic:
-        lens = np.asarray(self.cache.lengths)[list(slots)]
-        return paged_decode_traffic(
-            lens, self.cache.page_size, self.cache.pages_per_seq,
-            self.model.kv_token_bytes,
-        )
-
 
 def static_batch_generate(
     model: PagedLM,
@@ -399,10 +507,12 @@ def static_batch_generate(
 ) -> Dict[int, List[int]]:
     """Reference: all prompts prefilled up front, then one static decode batch.
 
-    Uses the exact same jitted prefill/decode functions as the scheduler, so
-    scheduled continuous batching must reproduce these tokens bit-for-bit
-    (asserted in tests/test_scheduler.py).  Requires a pool large enough to
-    hold every sequence at once.
+    Uses the same jitted single-step prefill/decode building blocks the
+    scheduler's fused fast path is made of (one-row ``prefill_batch`` calls,
+    ``decode_step`` with host-side argmax), so scheduled continuous batching
+    must reproduce these tokens bit-for-bit (asserted in
+    tests/test_scheduler.py).  Requires a pool large enough to hold every
+    sequence at once.
     """
     b = cache.page_table.shape[0]
     assert len(prompts) <= b, "static batch needs one slot per prompt"

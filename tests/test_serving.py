@@ -83,6 +83,35 @@ def test_paged_cache_allocation_lifecycle():
     assert int(np.asarray(cache.lengths)[0]) == 0
 
 
+def test_paged_cache_release_does_not_corrupt_old_copies():
+    """Regression: ``release`` (and ``allocate``) must copy host bookkeeping
+    before writing.  Previously ``release`` mutated ``self.mapped`` (and the
+    shared ``free`` list) in place, silently corrupting every older cache
+    object that the functional ``dataclasses.replace`` API implies is
+    immutable."""
+    cfg = smoke_config("yi-6b")
+    cache0 = PagedKVCache.create(cfg, batch=2, max_len=32, page=8)
+    cache1 = cache0.allocate(seq=0, n_pages=3)
+    free_before = list(cache1.free)
+    mapped_before = cache1.mapped.copy()
+    table_before = np.asarray(cache1.page_table).copy()
+
+    cache2 = cache1.release(seq=0)
+    # The new cache sees the release...
+    assert cache2.mapped[0] == 0
+    assert len(cache2.free) == len(free_before) + 3
+    # ...but the older caches are untouched.
+    np.testing.assert_array_equal(cache1.mapped, mapped_before)
+    assert cache1.free == free_before
+    np.testing.assert_array_equal(np.asarray(cache1.page_table), table_before)
+    assert cache0.mapped[0] == 0 and len(cache0.free) == 8
+
+    # allocate() must not leak page ids into older copies either.
+    cache3 = cache2.allocate(seq=1, n_pages=2)
+    assert len(cache2.free) == len(cache3.free) + 2
+    assert cache2.mapped[1] == 0 and cache3.mapped[1] == 2
+
+
 def test_w8a16_generation_consistent():
     """Quantized-MLP generation produces valid tokens and mostly agrees with
     full precision on a short greedy rollout."""
