@@ -109,6 +109,15 @@ def main() -> None:
               f"evictions={row['evictions']},"
               f"pack_KiB={row['pack_kib']:.0f},base_KiB={row['base_kib']:.0f},"
               f"pack_eff={row['pack_eff']:.1%},base_eff={row['base_eff']:.1%}")
+    print("\n# Serving prefill: batched chunked-prefill tokens/s; "
+          "PACK vs BASE efficiency of the prefill streams")
+    for row in srows:
+        print(f"serving_prefill,b={row['batch']},"
+              f"prompt_tokens={row['prompt_tokens']},"
+              f"prefill_tokens_s={row['prefill_tokens_per_s']:.0f},"
+              f"prefill_steps={row['prefill_steps']},"
+              f"pack_eff={row['prefill_pack_eff']:.1%},"
+              f"base_eff={row['prefill_base_eff']:.1%}")
     if args.json:
         payload = {
             "benchmark": "serving",
@@ -123,6 +132,11 @@ def main() -> None:
                 "evictions": r["evictions"],
                 "pack_efficiency": r["pack_eff"],
                 "base_efficiency": r["base_eff"],
+                "prompt_tokens": r["prompt_tokens"],
+                "prefill_steps": r["prefill_steps"],
+                "prefill_tokens_per_s": r["prefill_tokens_per_s"],
+                "prefill_pack_efficiency": r["prefill_pack_eff"],
+                "prefill_base_efficiency": r["prefill_base_eff"],
             } for r in srows],
         }
         with open(args.json, "w") as f:

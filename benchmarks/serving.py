@@ -5,7 +5,11 @@ For each batch size B, submits B variable-length requests to the
 :class:`repro.serve.Scheduler` and measures end-to-end decode throughput
 plus the per-step BASE-vs-PACK bus traffic (the serving-side instance of the
 Fig. 3 accounting: BASE streams the padded contiguous cache, PACK streams
-only mapped pages plus the near-memory page-table fetch).
+only mapped pages plus the near-memory page-table fetch).  A separate timed
+phase measures batched *prefill* throughput in isolation (the scheduler's
+``prefill_batch`` calls without decode interleaved), alongside the
+prefill-side PACK/BASE efficiencies aggregated from the scheduler's
+per-step records.
 
 The measured run is steady-state: the warmup pass executes the *same*
 workload so every jit entry the fused decode fast path uses (pow2 scan
@@ -25,7 +29,13 @@ import jax
 import numpy as np
 
 from repro.configs import smoke_config
-from repro.serve import PagedKVCache, PagedLM, Request, Scheduler
+from repro.serve import (
+    PagedKVCache,
+    PagedLM,
+    Request,
+    Scheduler,
+    build_prefill_rows,
+)
 
 PAGE = 8
 MAX_LEN = 64
@@ -41,6 +51,46 @@ def _run_once(model: PagedLM, prompts, n_new: int) -> Scheduler:
         sched.submit(Request(rid=i, prompt=p, max_new=n_new))
     sched.run()
     return sched
+
+
+def _prefill_once(model: PagedLM, prompts) -> float:
+    """One batched chunked prefill of every prompt (the scheduler's prefill
+    phase in isolation: same ``prefill_batch`` calls, no decode).
+
+    Batch assembly goes through the scheduler's own
+    :func:`repro.serve.build_prefill_rows` (finished prompts drop out,
+    pow2-bucketed rows), so the timed work is exactly what
+    ``Scheduler._prefill_all`` issues.  Returns the wall seconds of the
+    prefill loop only — cache creation and page allocation happen before
+    the clock starts (the pools are donated, so the cache must be rebuilt
+    per repeat, but that setup is host bookkeeping, not prefill).
+    """
+    b = len(prompts)
+    cache = PagedKVCache.create(model.cfg, batch=b, max_len=MAX_LEN, page=PAGE)
+    for i, p in enumerate(prompts):
+        cache = cache.allocate(i, cache.pages_for(len(p)))
+    pos = [0] * b
+    pending = list(range(b))
+    logits = None
+    t0 = time.perf_counter()
+    while pending:
+        toks, counts, slots, starts = build_prefill_rows(
+            [(prompts[j], pos[j], j) for j in pending], CHUNK, b
+        )
+        logits, cache = model.prefill_batch(toks, counts, slots, starts, cache)
+        for i, j in enumerate(pending):
+            pos[j] += int(counts[i])
+        pending = [j for j in pending if pos[j] < len(prompts[j])]
+    jax.block_until_ready(logits)
+    return time.perf_counter() - t0
+
+
+def _prefill_throughput(model: PagedLM, prompts, repeats: int) -> float:
+    """Prompt tokens/s of the batched prefill phase (best of ``repeats``)."""
+    tokens = sum(len(p) for p in prompts)
+    _prefill_once(model, prompts)  # warmup: compile the ctx buckets
+    wall = min(_prefill_once(model, prompts) for _ in range(max(1, repeats)))
+    return tokens / wall
 
 
 def serving_rows(
@@ -80,5 +130,12 @@ def serving_rows(
             "base_kib": st.base_bytes / 2**10,
             "pack_eff": st.pack_efficiency,
             "base_eff": st.base_efficiency,
+            "prompt_tokens": sum(len(p) for p in prompts),
+            "prefill_steps": st.prefill_steps,
+            "prefill_tokens_per_s": _prefill_throughput(
+                model, prompts, repeats
+            ),
+            "prefill_pack_eff": st.prefill_pack_efficiency,
+            "prefill_base_eff": st.prefill_base_efficiency,
         })
     return rows

@@ -16,6 +16,7 @@ from .streams import (
     beats_for,
     elements_per_beat,
     page_table_streams,
+    prefill_table_streams,
 )
 from .packing import (
     Traffic,
@@ -24,6 +25,7 @@ from .packing import (
     pack_strided,
     paged_decode_traffic,
     paged_prefill_traffic,
+    prefill_page_counts,
     strided_traffic,
     unpack_indirect,
     unpack_strided,

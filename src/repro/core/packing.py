@@ -26,6 +26,7 @@ __all__ = [
     "strided_traffic",
     "indirect_traffic",
     "paged_decode_traffic",
+    "prefill_page_counts",
     "paged_prefill_traffic",
 ]
 
@@ -174,6 +175,29 @@ def paged_decode_traffic(
     return Traffic(useful, base, pack, 0, idx)
 
 
+def prefill_page_counts(
+    starts, counts, page_size: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-row (context, chunk) page counts of one batched prefill step.
+
+    ``context[r]`` is the leading ``ceil((starts[r]+counts[r])/page)`` table
+    entries the chunk's attention walks; ``chunk[r]`` the pages positions
+    ``starts[r] .. starts[r]+counts[r]-1`` land in (the indirect write).
+    Padding rows (``counts[r] == 0``) touch nothing and count zero pages.
+
+    This is the single source of page math shared by the
+    :func:`paged_prefill_traffic` byte accounting and the
+    :func:`repro.core.streams.prefill_table_streams` descriptors — the same
+    pages the ``paged_prefill_attention`` kernel's index map resolves.
+    """
+    st = np.asarray(starts, dtype=np.int64)
+    ct = np.asarray(counts, dtype=np.int64)
+    live = st + ct
+    ctx = np.where(ct > 0, -(-live // page_size), 0)
+    chunk = np.where(ct > 0, (live - 1) // page_size - st // page_size + 1, 0)
+    return ctx, chunk
+
+
 def paged_prefill_traffic(
     starts,
     counts,
@@ -199,12 +223,10 @@ def paged_prefill_traffic(
     """
     st = np.asarray(starts, dtype=np.int64)
     ct = np.asarray(counts, dtype=np.int64)
-    live = st + ct
-    ctx_pages = int(np.sum(-(-live // page_size)))
-    # Pages the chunk writes: positions st .. st+ct-1 inclusive.
-    chunk_pages = int(np.sum(
-        np.where(ct > 0, (live - 1) // page_size - st // page_size + 1, 0)
-    ))
+    live = np.where(ct > 0, st + ct, 0)
+    ctx, chunk = prefill_page_counts(starts, counts, page_size)
+    ctx_pages = int(np.sum(ctx))
+    chunk_pages = int(np.sum(chunk))
     useful = int(np.sum(live) + np.sum(ct)) * token_bytes
     batch = int(np.count_nonzero(ct))
     base = (batch * pages_per_seq * page_size * token_bytes

@@ -34,6 +34,7 @@ __all__ = [
     "elements_per_beat",
     "beats_for",
     "page_table_streams",
+    "prefill_table_streams",
 ]
 
 
@@ -196,6 +197,66 @@ def page_table_streams(
                 elem_bits=elem_bits,
                 count=n,
                 indices=np.asarray(row[:n], dtype=np.int64),
+                index_bits=index_bits,
+            )
+        )
+    return tuple(out)
+
+
+def prefill_table_streams(
+    page_table,
+    starts,
+    counts,
+    page_size: int,
+    token_bytes: int,
+    index_bits: int = 32,
+) -> Tuple["IndirectStream", ...]:
+    """Batched indirect-stream descriptors for one chunked-prefill step.
+
+    The prefill-side sibling of :func:`page_table_streams`: per sequence
+    with a non-zero chunk, *two* indirect streams whose element is one
+    physical KV page —
+
+    * the **context read**: the leading ``ceil((start+count)/page)`` table
+      entries the ``paged_prefill_attention`` kernel walks (its scalar-
+      prefetch index vector, verbatim), and
+    * the **chunk write**: the entries covering positions
+      ``start .. start+count-1`` that ``paged_kv_write_chunk`` scatters
+      through.
+
+    Page math is shared with :func:`repro.core.packing.paged_prefill_traffic`
+    via :func:`repro.core.packing.prefill_page_counts`, so the descriptors,
+    the byte accounting, and the kernel's DMA walk are one source of truth.
+    """
+    from .packing import prefill_page_counts
+
+    pt = np.asarray(page_table)
+    st = np.asarray(starts)
+    ct = np.asarray(counts)
+    ctx, chunk = prefill_page_counts(st, ct, page_size)
+    elem_bits = page_size * token_bytes * 8
+    out = []
+    for row, s, n, nc, nw in zip(pt, st, ct, ctx, chunk):
+        if n == 0:
+            continue
+        out.append(
+            IndirectStream(
+                base=0,
+                elem_bits=elem_bits,
+                count=int(nc),
+                indices=np.asarray(row[: int(nc)], dtype=np.int64),
+                index_bits=index_bits,
+            )
+        )
+        p_lo = int(s) // page_size
+        out.append(
+            IndirectStream(
+                base=0,
+                elem_bits=elem_bits,
+                count=int(nw),
+                indices=np.asarray(
+                    row[p_lo : p_lo + int(nw)], dtype=np.int64
+                ),
                 index_bits=index_bits,
             )
         )

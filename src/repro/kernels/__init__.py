@@ -12,6 +12,7 @@ from .ops import (
     moe_combine,
     moe_dispatch,
     paged_decode_attention,
+    paged_prefill_attention,
     spmv_ell,
     strided_gather,
     strided_scatter,

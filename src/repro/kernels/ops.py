@@ -32,6 +32,7 @@ from .transpose import transpose_kernel
 from .spmv import spmv_ell_kernel
 from .flash_attention import flash_attention_kernel
 from .paged_decode import paged_decode_attention_kernel
+from .paged_prefill import paged_prefill_attention_kernel
 
 __all__ = [
     "on_cpu",
@@ -43,6 +44,7 @@ __all__ = [
     "spmv_ell",
     "flash_attention",
     "paged_decode_attention",
+    "paged_prefill_attention",
     "paged_kv_append",
     "paged_kv_write_chunk",
     "moe_dispatch",
@@ -260,6 +262,34 @@ def paged_decode_attention(
     return paged_decode_attention_kernel(
         q, k_pages, v_pages, page_table, lengths,
         k_scale=k_scale, v_scale=v_scale, scale=scale, interpret=_interpret(),
+    )
+
+
+def paged_prefill_attention(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    ctx_rows: jax.Array,
+    starts: jax.Array,
+    counts: jax.Array,
+    scale: Optional[float] = None,
+    impl: str = "pallas",
+) -> jax.Array:
+    """Causal chunk attention for batched prefill, straight from the pool.
+
+    ``impl='pallas'`` streams each row's context pages through the scalar-
+    prefetch indirect path with an online softmax (no gathered context or
+    dense score tensor in HBM; GQA grouped in-kernel); ``impl='ref'`` is the
+    dense gather + einsum oracle (the pre-kernel serving path).  Rows with
+    ``counts == 0`` produce zeros under both.
+    """
+    if impl == "ref":
+        return ref.paged_prefill_attention(
+            q, k_pages, v_pages, ctx_rows, starts, counts, scale=scale
+        )
+    return paged_prefill_attention_kernel(
+        q, k_pages, v_pages, ctx_rows, starts, counts, scale=scale,
+        interpret=_interpret(),
     )
 
 

@@ -178,6 +178,61 @@ def paged_decode_attention(
     return jnp.einsum("bhk,bhkd->bhd", w, vg.astype(jnp.float32)).astype(q.dtype)
 
 
+def paged_prefill_attention(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    ctx_rows: jax.Array,
+    starts: jax.Array,
+    counts: jax.Array,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Causal chunk attention over a paged KV pool (oracle, dense einsum).
+
+    q:         (R, C, H, D)    chunk queries; row r's query ``c`` is at
+               absolute position ``starts[r] + c``
+    k/v_pages: (P, page, KVH, D) physical pool (chunk K/V already written)
+    ctx_rows:  (R, ctx_pages)  leading page-table entries per row
+    starts/counts: (R,) int32; ``counts[r] == 0`` rows are padding
+
+    Gathers each row's bounded context densely, repeats K/V for GQA, and
+    masks with a *finite* constant (``jnp.finfo.min``) so fully-masked rows
+    (padding rows, degenerate starts) can never produce NaN softmax outputs
+    — their weights are zeroed instead, matching the kernel's skipped
+    blocks.  This is the pre-kernel serving prefill path, kept verbatim as
+    the ground truth the Pallas kernel is validated against.
+    """
+    r, c, h, d = q.shape
+    page = k_pages.shape[1]
+    kvh = k_pages.shape[2]
+    ctx_pages = ctx_rows.shape[1]
+    skv = ctx_pages * page
+    kg = jnp.take(k_pages, ctx_rows.reshape(-1), axis=0).reshape(
+        r, skv, kvh, d
+    )
+    vg = jnp.take(v_pages, ctx_rows.reshape(-1), axis=0).reshape(
+        r, skv, kvh, d
+    )
+    rep = h // kvh
+    kg = jnp.repeat(kg, rep, axis=2)                       # (R, S, H, D)
+    vg = jnp.repeat(vg, rep, axis=2)
+    pos = starts[:, None] + jnp.arange(c, dtype=jnp.int32)  # (R, C)
+    kv_pos = jnp.arange(skv, dtype=jnp.int32)
+    # Padding rows (counts == 0) are fully masked regardless of ``starts``:
+    # their context bound is forced to zero, so they output exact zeros.
+    live = jnp.where(counts > 0, starts + counts, 0)
+    mask = (kv_pos[None, None, :] <= pos[:, :, None]) & (
+        kv_pos[None, None, :] < live[:, None, None]
+    )                                                      # (R, C, S)
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    s = jnp.einsum("rchd,rshd->rchs", q, kg).astype(jnp.float32) * scale
+    s = jnp.where(mask[:, :, None, :], s, jnp.finfo(s.dtype).min)
+    w = jax.nn.softmax(s, axis=-1)
+    w = jnp.where(mask[:, :, None, :], w, 0.0)
+    out = jnp.einsum("rchs,rshd->rchd", w, vg.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 def paged_kv_append(
     k_pages: jax.Array,
     v_pages: jax.Array,

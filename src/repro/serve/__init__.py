@@ -6,5 +6,6 @@ from .scheduler import (
     Scheduler,
     ServeStats,
     StepRecord,
+    build_prefill_rows,
     static_batch_generate,
 )

@@ -23,18 +23,18 @@ device→host sync on the hot path.
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import dataclasses
 import functools
 import warnings
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core.packing import pack_indirect
 from repro.kernels import ops as kops
 from repro.models import lm
 from repro.models.common import rms_norm
@@ -285,21 +285,22 @@ def _paged_lm_prefill_batch(params, tokens, counts, seqs, starts, k_pages,
 
     KV rows are scattered through the chunk-bounded indirect write
     (:func:`repro.kernels.ops.paged_kv_write_chunk` — R·W pages of traffic,
-    never the whole pool), and each layer's attention gathers only the
-    leading ``ctx_pages`` table entries per sequence (the pages that can
-    hold context for this chunk) instead of the full table row.  Returns the
-    last *real* token's logits per row plus the updated pools.
+    never the whole pool), and each layer's attention runs through
+    :func:`repro.kernels.ops.paged_prefill_attention` over only the leading
+    ``ctx_pages`` table entries per sequence (the pages that can hold
+    context for this chunk), never the full table row.  Under
+    ``impl='pallas'`` the context pages stream HBM→VMEM one at a time with
+    an online softmax (no gathered context or dense score tensor); under
+    ``impl='ref'`` the dense-einsum oracle runs, masked with a finite
+    constant so ``counts == 0`` padding rows can never produce NaN softmax
+    outputs that poison the donated pools.  Returns the last *real* token's
+    logits per row plus the updated pools.
     """
     n_layers = params["wq"].shape[0]
     r, c = tokens.shape
     x = jnp.take(params["embed"], tokens, axis=0)          # (R, C, d)
     rows = jnp.take(page_table, seqs, axis=0)              # (R, n_pages)
-    pos = starts[:, None] + jnp.arange(c, dtype=jnp.int32)  # (R, C)
     ctx_rows = rows[:, :ctx_pages]
-    kv_pos = jnp.arange(ctx_pages * page, dtype=jnp.int32)
-    causal = kv_pos[None, None, :] <= pos[:, :, None]      # (R, C, S)
-    scale = 1.0 / np.sqrt(hd)
-    rep = h // kvh
     kps, vps = [], []
     for l in range(n_layers):
         kn = (x @ params["wk"][l]).reshape(r, c, kvh, hd)
@@ -309,20 +310,10 @@ def _paged_lm_prefill_batch(params, tokens, counts, seqs, starts, k_pages,
         )
         kps.append(kp)
         vps.append(vp)
-        # Indirect read of each row's bounded context: (R, ctx·page, KVH, hd)
-        kg = pack_indirect(kp, ctx_rows.reshape(-1)).reshape(
-            r, ctx_pages * page, kvh, hd
-        )
-        vg = pack_indirect(vp, ctx_rows.reshape(-1)).reshape(
-            r, ctx_pages * page, kvh, hd
-        )
-        kg = jnp.repeat(kg, rep, axis=2)                   # (R, S, h, hd)
-        vg = jnp.repeat(vg, rep, axis=2)
         q = (x @ params["wq"][l]).reshape(r, c, h, hd)
-        s = jnp.einsum("rchd,rshd->rchs", q, kg).astype(jnp.float32) * scale
-        s = jnp.where(causal[:, :, None, :], s, -jnp.inf)
-        w = jax.nn.softmax(s, axis=-1)
-        attn = jnp.einsum("rchs,rshd->rchd", w, vg.astype(jnp.float32))
+        attn = kops.paged_prefill_attention(
+            q, kp, vp, ctx_rows, starts, counts, impl=impl
+        )
         x = x + attn.astype(x.dtype).reshape(r, c, h * hd) @ params["wo"][l]
     last = jnp.take_along_axis(
         x, jnp.clip(counts - 1, 0, c - 1)[:, None, None].astype(jnp.int32),
@@ -352,13 +343,27 @@ class PagedLM:
     calling code never needs to read device state back.
     """
 
-    def __init__(self, cfg: ArchConfig, key: jax.Array, impl: str = "pallas"):
+    #: Max resident jitted prefill programs.  Each distinct ``(page, ctx)``
+    #: bucket mints one program; ragged prompt-length traffic over many page
+    #: sizes would otherwise grow the cache without bound.
+    PREFILL_CACHE_CAP = 8
+
+    def __init__(self, cfg: ArchConfig, key: jax.Array, impl: str = "pallas",
+                 prefill_cache_cap: Optional[int] = None):
         self.cfg = cfg
         self.impl = impl
         h, kvh = cfg.heads_for_tp(1)
         self.h, self.kvh, self.hd = h, kvh, cfg.hd
         d, L = cfg.d_model, cfg.n_layers
-        self._prefill_cache: Dict[Any, Any] = {}
+        self.prefill_cache_cap = (
+            self.PREFILL_CACHE_CAP if prefill_cache_cap is None
+            else prefill_cache_cap
+        )
+        # LRU over (page, ctx_pages) buckets: refreshed on hit, evicted
+        # oldest-first past the cap (a re-requested evicted bucket simply
+        # re-jits — correctness never depends on residency).
+        self._prefill_cache: "collections.OrderedDict[Tuple[int, int], Any]" \
+            = collections.OrderedDict()
         ks = jax.random.split(key, 5)
         init = lambda k, *s: (jax.random.normal(k, s, jnp.float32)
                               / np.sqrt(s[-2]))
@@ -495,6 +500,10 @@ class PagedLM:
         fn = self._prefill_cache.get(key)
         if fn is None:
             fn = self._prefill_cache[key] = self._prefill(page, ctx)
+            while len(self._prefill_cache) > self.prefill_cache_cap:
+                self._prefill_cache.popitem(last=False)
+        else:
+            self._prefill_cache.move_to_end(key)
         with _donation_noop_ok():
             logits, kp, vp, new_len = fn(
                 self.params, jnp.asarray(tokens), jnp.asarray(counts),

@@ -16,7 +16,10 @@ Scheduling policy (vLLM-shaped, deliberately simple and deterministic):
 * **Prefill** — chunked and batched: each scheduler step advances *every*
   pending request by one fixed-size chunk in a single
   ``PagedLM.prefill_batch`` call, interleaved with decode (prefill never
-  starves decode and vice versa).
+  starves decode and vice versa).  Each prefill step records its
+  :func:`repro.core.streams.prefill_table_streams` descriptors (context
+  read + chunk write per row) and ``paged_prefill_traffic`` the way decode
+  steps already record theirs.
 * **Decode fast path** — between scheduling boundaries (admission, prefill,
   page growth, retirement) every decode quantity is known on the host, so
   the scheduler *fuses* all steps up to the next boundary into device-
@@ -63,7 +66,11 @@ from repro.core.packing import (
     paged_decode_traffic,
     paged_prefill_traffic,
 )
-from repro.core.streams import IndirectStream, page_table_streams
+from repro.core.streams import (
+    IndirectStream,
+    page_table_streams,
+    prefill_table_streams,
+)
 from .engine import OutOfPages, PagedKVCache, PagedLM
 
 __all__ = [
@@ -72,8 +79,34 @@ __all__ = [
     "Scheduler",
     "StepRecord",
     "ServeStats",
+    "build_prefill_rows",
     "static_batch_generate",
 ]
+
+
+def build_prefill_rows(
+    items: Sequence[Tuple[np.ndarray, int, int]], chunk: int, batch: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Assemble one batched-prefill call from pending (prompt, start, slot)s.
+
+    Rows are pow2-bucketed to the pending count (never padded to the full
+    batch): compute scales with actual prefill work while the jit cache
+    stays O(log batch).  Returns ``(tokens (R, chunk), counts, slots,
+    starts)`` with zero-filled padding rows past the pending set.  Single
+    source of the bucketing/assembly shared by ``Scheduler._prefill_all``
+    and the serving benchmark's isolated prefill phase — so the benchmark
+    times exactly the calls the scheduler issues.
+    """
+    rows = min(1 << max(len(items) - 1, 0).bit_length(), batch)
+    toks = np.zeros((rows, chunk), np.int32)
+    counts = np.zeros((rows,), np.int32)
+    slots = np.zeros((rows,), np.int32)
+    starts = np.zeros((rows,), np.int32)
+    for i, (prompt, start, slot) in enumerate(items):
+        count = min(chunk, len(prompt) - start)
+        toks[i, :count] = prompt[start:start + count]
+        counts[i], slots[i], starts[i] = count, slot, start
+    return toks, counts, slots, starts
 
 
 class RequestState(enum.Enum):
@@ -146,11 +179,11 @@ class ServeStats:
     def tokens(self) -> int:
         return sum(r.new_tokens for r in self.records)
 
-    def _sum(self, attr: str) -> int:
+    def _sum(self, attr: str, kind: str = "decode") -> int:
         return sum(
             getattr(r.traffic, attr)
             for r in self.records
-            if r.kind == "decode" and r.traffic is not None
+            if r.kind == kind and r.traffic is not None
         )
 
     @property
@@ -176,6 +209,35 @@ class ServeStats:
     @property
     def tokens_per_s(self) -> float:
         return self.tokens / self.wall_s if self.wall_s else 0.0
+
+    # -- prefill-side aggregates (same Traffic records, kind='prefill') ------
+
+    @property
+    def prefill_steps(self) -> int:
+        return sum(1 for r in self.records if r.kind == "prefill")
+
+    @property
+    def prefill_base_bytes(self) -> int:
+        return self._sum("base_bytes", "prefill")
+
+    @property
+    def prefill_pack_bytes(self) -> int:
+        return (self._sum("pack_bytes", "prefill")
+                + self._sum("index_bus_bytes_pack", "prefill"))
+
+    @property
+    def prefill_useful_bytes(self) -> int:
+        return self._sum("useful_bytes", "prefill")
+
+    @property
+    def prefill_base_efficiency(self) -> float:
+        b = self.prefill_base_bytes
+        return self.prefill_useful_bytes / b if b else 1.0
+
+    @property
+    def prefill_pack_efficiency(self) -> float:
+        p = self.prefill_pack_bytes
+        return self.prefill_useful_bytes / p if p else 1.0
 
 
 class Scheduler:
@@ -301,20 +363,11 @@ class Scheduler:
         if not pending:
             return
         pending.sort(key=lambda x: x.admit_order)
-        # Rows pow2-bucketed to the pending count (not padded to the full
-        # batch): compute scales with actual prefill work while the jit
-        # cache stays O(log batch).
         b = self.cache.page_table.shape[0]
-        rows = min(1 << max(len(pending) - 1, 0).bit_length(), b)
-        toks = np.zeros((rows, self.chunk), np.int32)
-        counts = np.zeros((rows,), np.int32)
-        slots = np.zeros((rows,), np.int32)
-        starts = np.zeros((rows,), np.int32)
-        for i, r in enumerate(pending):
-            start = r.prefill_pos
-            count = min(self.chunk, r.prompt_len - start)
-            toks[i, :count] = r.prompt[start:start + count]
-            counts[i], slots[i], starts[i] = count, r.slot, start
+        toks, counts, slots, starts = build_prefill_rows(
+            [(r.prompt, r.prefill_pos, r.slot) for r in pending],
+            self.chunk, b,
+        )
         logits, self.cache = self.model.prefill_batch(
             toks, counts, slots, starts, self.cache
         )
@@ -335,13 +388,24 @@ class Scheduler:
                 new_tokens += 1
                 if r.on_token:
                     r.on_token(r, tok)
+        # Stream descriptors + traffic from the same host-shadow page math
+        # the kernel's scalar-prefetch walk resolves (as decode does).
+        table = (self.cache.page_table_host
+                 if self.cache.page_table_host is not None
+                 else np.asarray(self.cache.page_table))
+        n = len(pending)
         self.stats.records.append(StepRecord(
-            step=self._step, kind="prefill", n_active=len(pending),
+            step=self._step, kind="prefill", n_active=n,
             new_tokens=new_tokens,
             traffic=paged_prefill_traffic(
-                starts[: len(pending)], counts[: len(pending)],
+                starts[:n], counts[:n],
                 self.cache.page_size, self.cache.pages_per_seq,
                 self.model.kv_token_bytes,
+            ),
+            streams=prefill_table_streams(
+                table[slots[:n]],  # fancy indexing: bounded per-row copy
+                starts[:n], counts[:n],
+                self.cache.page_size, self.model.kv_token_bytes,
             ),
         ))
 

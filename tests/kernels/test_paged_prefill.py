@@ -1,0 +1,141 @@
+"""Paged prefill attention kernel vs the dense-einsum oracle.
+
+The kernel streams each row's context pages through the scalar-prefetch
+indirect path with an online softmax (interpret mode on this CPU host —
+identical kernel code compiles on TPU); the oracle gathers the bounded
+context densely and runs masked softmax with GQA repeats.  Sweeps cover
+ragged per-row context, GQA group sizes, chunks straddling page boundaries,
+exact page-multiple boundaries, padding rows, and the no-DMA clamp for
+unmapped tail pages.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+
+
+def _pool(rng, pool, page, kvh, d):
+    k = jnp.asarray(rng.normal(size=(pool, page, kvh, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(pool, page, kvh, d)), jnp.float32)
+    return k, v
+
+
+def _case(rng, r, c, h, kvh, d, pool, page, ctx):
+    kp, vp = _pool(rng, pool, page, kvh, d)
+    q = jnp.asarray(rng.normal(size=(r, c, h, d)), jnp.float32)
+    rows = jnp.asarray(
+        rng.permutation(pool)[: r * ctx].reshape(r, ctx), jnp.int32
+    )
+    return q, kp, vp, rows
+
+
+def _both(q, kp, vp, rows, starts, counts):
+    want = ops.paged_prefill_attention(
+        q, kp, vp, rows, starts, counts, impl="ref"
+    )
+    got = ops.paged_prefill_attention(
+        q, kp, vp, rows, starts, counts, impl="pallas"
+    )
+    return np.asarray(got), np.asarray(want)
+
+
+@pytest.mark.parametrize("h,kvh", [(4, 4), (8, 2), (6, 1)])
+def test_matches_ref_gqa(h, kvh):
+    """GQA group sizes 1/4/6 (incl. MHA): kernel groups queries per KV head
+    instead of repeating K/V."""
+    rng = np.random.default_rng(0)
+    q, kp, vp, rows = _case(rng, r=3, c=8, h=h, kvh=kvh, d=32,
+                            pool=16, page=4, ctx=4)
+    starts = jnp.asarray([0, 6, 3], jnp.int32)    # ragged, mid-page starts
+    counts = jnp.asarray([8, 8, 5], jnp.int32)
+    got, want = _both(q, kp, vp, rows, starts, counts)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_matches_ref_ragged_ctx_and_padding_rows():
+    """Per-row context lengths differ by pages; counts==0 padding rows give
+    zero output under both implementations (no NaNs) — including a
+    *degenerate start* (counts==0 with starts>0), whose context bound is
+    forced to zero rather than attending stale pool data."""
+    rng = np.random.default_rng(1)
+    q, kp, vp, rows = _case(rng, r=5, c=4, h=4, kvh=2, d=16,
+                            pool=28, page=4, ctx=5)
+    starts = jnp.asarray([0, 12, 4, 0, 9], jnp.int32)
+    counts = jnp.asarray([4, 4, 2, 0, 0], jnp.int32)  # ctx pages: 1,4,2,0,0
+    got, want = _both(q, kp, vp, rows, starts, counts)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    assert np.isfinite(got).all() and np.isfinite(want).all()
+    assert np.abs(got[3]).max() == 0.0             # padding row → zeros
+    assert np.abs(want[3]).max() == 0.0
+    assert np.abs(got[4]).max() == 0.0             # degenerate start → zeros
+    assert np.abs(want[4]).max() == 0.0
+
+
+def test_matches_ref_chunk_straddles_page_boundary():
+    """A chunk whose tokens span two pages (start mid-page, count past the
+    boundary) accumulates across the straddled pages correctly."""
+    rng = np.random.default_rng(2)
+    q, kp, vp, rows = _case(rng, r=2, c=6, h=4, kvh=2, d=16,
+                            pool=12, page=4, ctx=3)
+    starts = jnp.asarray([2, 7], jnp.int32)        # both straddle a boundary
+    counts = jnp.asarray([6, 5], jnp.int32)
+    got, want = _both(q, kp, vp, rows, starts, counts)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_matches_ref_exact_page_multiple_boundary():
+    """start+count landing exactly on a page boundary (the off-by-one spot):
+    the last context page is exactly full and no further page is walked."""
+    rng = np.random.default_rng(3)
+    q, kp, vp, rows = _case(rng, r=3, c=4, h=4, kvh=2, d=16,
+                            pool=16, page=4, ctx=4)
+    starts = jnp.asarray([0, 4, 12], jnp.int32)
+    counts = jnp.asarray([4, 4, 4], jnp.int32)     # ends at 4, 8, 16 exactly
+    got, want = _both(q, kp, vp, rows, starts, counts)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_unmapped_tail_pages_issue_no_dmas():
+    """Table entries past a row's last context page may be garbage: the index
+    map clamps the walk to the last real page, so a poison page (NaN-filled)
+    referenced only by tail entries is never fetched and cannot contaminate
+    the output."""
+    rng = np.random.default_rng(4)
+    pool, page, kvh, d, h, c, ctx = 10, 4, 2, 16, 4, 4, 4
+    kp, vp = _pool(rng, pool, page, kvh, d)
+    poison = pool - 1
+    kp = kp.at[poison].set(jnp.nan)
+    vp = vp.at[poison].set(jnp.nan)
+    q = jnp.asarray(rng.normal(size=(2, c, h, d)), jnp.float32)
+    clean = jnp.asarray([[0, 1, 2, 3], [4, 5, 6, 7]], jnp.int32)
+    starts = jnp.asarray([0, 2], jnp.int32)
+    counts = jnp.asarray([4, 4], jnp.int32)        # ctx pages used: 1, 2
+    # Reference on the clean table; kernel with tails pointing at the poison.
+    want = ops.paged_prefill_attention(
+        q, kp, vp, clean, starts, counts, impl="ref"
+    )
+    dirty = clean.at[0, 1:].set(poison).at[1, 2:].set(poison)
+    got = ops.paged_prefill_attention(
+        q, kp, vp, dirty, starts, counts, impl="pallas"
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5
+    )
+    assert np.isfinite(np.asarray(got)).all()
+
+
+def test_fp32_accumulation_under_bf16_inputs():
+    """bf16 q/kv still accumulate the softmax and pv products in fp32."""
+    rng = np.random.default_rng(5)
+    q, kp, vp, rows = _case(rng, r=2, c=4, h=4, kvh=2, d=16,
+                            pool=8, page=4, ctx=2)
+    qb, kb, vb = (x.astype(jnp.bfloat16) for x in (q, kp, vp))
+    starts = jnp.asarray([0, 3], jnp.int32)
+    counts = jnp.asarray([4, 4], jnp.int32)
+    got, want = _both(qb, kb, vb, rows, starts, counts)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        got.astype(np.float32), want.astype(np.float32), rtol=2e-2, atol=2e-2
+    )

@@ -7,7 +7,14 @@ import numpy as np
 import pytest
 
 from repro.configs import smoke_config
-from repro.core import IndirectStream, page_table_streams, paged_decode_traffic
+from repro.core import (
+    IndirectStream,
+    page_table_streams,
+    paged_decode_traffic,
+    paged_prefill_traffic,
+    prefill_page_counts,
+    prefill_table_streams,
+)
 from repro.kernels import ops, ref
 from repro.serve import (
     OutOfPages,
@@ -216,6 +223,58 @@ def test_page_table_streams_describe_mapped_pages():
     np.testing.assert_array_equal(streams[0].indices, [3, 1])
     np.testing.assert_array_equal(streams[1].indices, [2, 5, 7])
     assert streams[0].elem_bits == 4 * 256 * 8
+
+
+def test_prefill_table_streams_match_traffic_page_math():
+    """The prefill stream descriptors (context read + chunk write per row)
+    and ``paged_prefill_traffic`` must account exactly the same pages —
+    one source of truth (``prefill_page_counts``) for descriptors, bytes,
+    and the kernel's scalar-prefetch walk."""
+    table = np.array([[3, 1, 6, 0], [2, 5, 7, 4], [9, 8, 0, 0]])
+    starts = np.array([0, 5, 0])
+    counts = np.array([4, 6, 0])    # page=4: ctx 1|3|0, chunk 1|2|0 pages
+    streams = prefill_table_streams(
+        table, starts, counts, page_size=4, token_bytes=256
+    )
+    assert len(streams) == 4        # two per real row, none for padding
+    assert all(isinstance(s, IndirectStream) for s in streams)
+    np.testing.assert_array_equal(streams[0].indices, [3])        # row0 ctx
+    np.testing.assert_array_equal(streams[1].indices, [3])        # row0 chunk
+    np.testing.assert_array_equal(streams[2].indices, [2, 5, 7])  # row1 ctx
+    np.testing.assert_array_equal(streams[3].indices, [5, 7])     # row1 chunk
+    ctx, chunk = prefill_page_counts(starts, counts, 4)
+    assert sum(s.count for s in streams) == int(ctx.sum() + chunk.sum())
+    t = paged_prefill_traffic(
+        starts, counts, page_size=4, pages_per_seq=4, token_bytes=256
+    )
+    page_bytes = 4 * 256
+    assert t.pack_bytes == int(ctx.sum() + chunk.sum()) * page_bytes
+
+
+def test_scheduler_prefill_records_carry_streams():
+    """Prefill StepRecords expose their indirect-stream descriptors (as
+    decode records already do), and the stats aggregate the prefill-side
+    PACK/BASE traffic separately."""
+    rng = np.random.default_rng(21)
+    prompts = _prompts(rng, (9, 5))
+    cache = PagedKVCache.create(CFG, batch=2, max_len=32, page=4)
+    sched = Scheduler(MODEL, cache, chunk=4)
+    for i, p in enumerate(prompts):
+        sched.submit(Request(rid=i, prompt=p, max_new=3))
+    sched.run()
+    prefills = [r for r in sched.stats.records if r.kind == "prefill"]
+    assert prefills and all(r.streams for r in prefills)
+    assert all(isinstance(s, IndirectStream)
+               for r in prefills for s in r.streams)
+    # Stream pages == traffic pages, step by step.
+    page_bytes = 4 * MODEL.kv_token_bytes
+    for r in prefills:
+        assert sum(s.count for s in r.streams) * page_bytes \
+            == r.traffic.pack_bytes
+    assert sched.stats.prefill_steps == len(prefills)
+    assert 0.0 < sched.stats.prefill_pack_efficiency <= 1.0
+    assert sched.stats.prefill_pack_efficiency \
+        > sched.stats.prefill_base_efficiency
 
 
 def test_paged_decode_traffic_base_vs_pack():
