@@ -118,11 +118,29 @@ def main() -> None:
               f"prefill_steps={row['prefill_steps']},"
               f"pack_eff={row['prefill_pack_eff']:.1%},"
               f"base_eff={row['prefill_base_eff']:.1%}")
+
+    # ---- Serving, int8 page pools: the element-size lever ---------------
+    # Same prompts / workload as the fp32 sweep, but the pools hold int8
+    # codes + fp32 scale sidebands: quantize-on-write, in-kernel dequant,
+    # and the 8-bit packing factor in the PACK accounting.
+    print("\n# Serving int8: quantized page pools (pool bytes ÷4 vs fp32; "
+          "PACK packs 4x more elements per granule)")
+    irows = serving_rows(quick=args.quick, kv_dtype="int8")
+    fp_by_batch = {r["batch"]: r for r in srows}
+    for row in irows:
+        fp = fp_by_batch[row["batch"]]
+        print(f"serving_int8,b={row['batch']},"
+              f"tokens_s={row['tokens_per_s']:.0f},"
+              f"vs_fp32={row['tokens_per_s'] / fp['tokens_per_s']:.2f}x,"
+              f"pack_KiB={row['pack_kib']:.0f},"
+              f"pool_bytes={row['pool_bytes']},"
+              f"pool_vs_fp32={fp['pool_bytes'] / row['pool_bytes']:.2f}x,"
+              f"pack_eff={row['pack_eff']:.1%},base_eff={row['base_eff']:.1%},"
+              f"prefill_pack_eff={row['prefill_pack_eff']:.1%}")
+
     if args.json:
-        payload = {
-            "benchmark": "serving",
-            "quick": bool(args.quick),
-            "rows": [{
+        def _json_row(r):
+            return {
                 "batch": r["batch"],
                 "tokens": r["tokens"],
                 "wall_s": r["wall_s"],
@@ -137,7 +155,27 @@ def main() -> None:
                 "prefill_tokens_per_s": r["prefill_tokens_per_s"],
                 "prefill_pack_efficiency": r["prefill_pack_eff"],
                 "prefill_base_efficiency": r["prefill_base_eff"],
-            } for r in srows],
+                "kv_elem_bits": r["kv_elem_bits"],
+                "pool_bytes": r["pool_bytes"],
+            }
+
+        payload = {
+            "benchmark": "serving",
+            "quick": bool(args.quick),
+            "rows": [_json_row(r) for r in srows],
+            "serving_int8": {
+                "rows": [dict(
+                    _json_row(r),
+                    tokens_per_s_vs_fp32=(
+                        r["tokens_per_s"]
+                        / fp_by_batch[r["batch"]]["tokens_per_s"]
+                    ),
+                    pool_bytes_vs_fp32=(
+                        fp_by_batch[r["batch"]]["pool_bytes"]
+                        / r["pool_bytes"]
+                    ),
+                ) for r in irows],
+            },
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

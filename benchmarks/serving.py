@@ -11,6 +11,12 @@ phase measures batched *prefill* throughput in isolation (the scheduler's
 prefill-side PACK/BASE efficiencies aggregated from the scheduler's
 per-step records.
 
+The same sweep re-runs with ``kv_dtype='int8'`` (the ``serving_int8``
+section): quantize-on-write page pools, in-kernel dequant, and the 8-bit
+packing factor in the PACK accounting — pool bytes quartered vs fp32 and
+4x the elements per bus granule, the paper's element-size lever (§III-E)
+applied to serving.
+
 The measured run is steady-state: the warmup pass executes the *same*
 workload so every jit entry the fused decode fast path uses (pow2 scan
 lengths, prefill context buckets) is compiled before the clock starts, and
@@ -42,10 +48,16 @@ MAX_LEN = 64
 CHUNK = 8
 
 
-def _run_once(model: PagedLM, prompts, n_new: int) -> Scheduler:
-    cache = PagedKVCache.create(
-        model.cfg, batch=len(prompts), max_len=MAX_LEN, page=PAGE
+def _create_cache(model: PagedLM, batch: int) -> PagedKVCache:
+    # Pools at the model's exact kv dtype: the Scheduler rejects mismatches.
+    return PagedKVCache.create(
+        model.cfg, batch=batch, max_len=MAX_LEN, page=PAGE,
+        kv_dtype=model.kv_dtype,
     )
+
+
+def _run_once(model: PagedLM, prompts, n_new: int) -> Scheduler:
+    cache = _create_cache(model, len(prompts))
     sched = Scheduler(model, cache, chunk=CHUNK)
     for i, p in enumerate(prompts):
         sched.submit(Request(rid=i, prompt=p, max_new=n_new))
@@ -66,7 +78,7 @@ def _prefill_once(model: PagedLM, prompts) -> float:
     per repeat, but that setup is host bookkeeping, not prefill).
     """
     b = len(prompts)
-    cache = PagedKVCache.create(model.cfg, batch=b, max_len=MAX_LEN, page=PAGE)
+    cache = _create_cache(model, b)
     for i, p in enumerate(prompts):
         cache = cache.allocate(i, cache.pages_for(len(p)))
     pos = [0] * b
@@ -99,12 +111,17 @@ def serving_rows(
     max_prompt: int = 24,
     quick: bool = False,
     repeats: int = 5,
+    kv_dtype: str = None,
 ) -> List[Dict]:
+    """One row per batch size; ``kv_dtype='int8'`` serves from quantized
+    pools (quantize-on-write + in-kernel dequant) — same prompts, same
+    workload, so rows are directly comparable to the full-precision sweep.
+    """
     if quick:
         batch_sizes = (1, 4)
         n_new = 8
     cfg = smoke_config("yi-6b")
-    model = PagedLM(cfg, jax.random.PRNGKey(0), impl="ref")
+    model = PagedLM(cfg, jax.random.PRNGKey(0), impl="ref", kv_dtype=kv_dtype)
     rng = np.random.default_rng(0)
     rows = []
     for b in batch_sizes:
@@ -137,5 +154,7 @@ def serving_rows(
             ),
             "prefill_pack_eff": st.prefill_pack_efficiency,
             "prefill_base_eff": st.prefill_base_efficiency,
+            "kv_elem_bits": model.kv_elem_bits,
+            "pool_bytes": sched.cache.pool_bytes,
         })
     return rows

@@ -23,6 +23,7 @@ from .packing import (
     indirect_traffic,
     pack_indirect,
     pack_strided,
+    packed_token_bytes,
     paged_decode_traffic,
     paged_prefill_traffic,
     prefill_page_counts,

@@ -25,6 +25,7 @@ __all__ = [
     "Traffic",
     "strided_traffic",
     "indirect_traffic",
+    "packed_token_bytes",
     "paged_decode_traffic",
     "prefill_page_counts",
     "paged_prefill_traffic",
@@ -138,6 +139,23 @@ def indirect_traffic(
     return Traffic(useful, base, pack, idx, 0)
 
 
+def packed_token_bytes(
+    token_bytes: int, elem_bits: int = 32, scale_bytes_per_token: int = 0
+) -> int:
+    """Per-token bytes PACK actually moves for a KV stream.
+
+    ``token_bytes`` is the *FP32-equivalent* (full-width) per-token
+    footprint; ``elem_bits`` the real element width on the stream.  Narrow
+    elements pack densely, so the payload scales by ``elem_bits / 32`` — the
+    paper's packing-factor argument (``bus / elem`` elements per beat,
+    §II-C/§III-E): 8-bit elements quadruple the FP32 packing factor.
+    ``scale_bytes_per_token`` adds the sideband metadata a quantized pool
+    fetches next to the codes (the per-(token, kv-head) fp32 scales), which
+    is real bandwidth and is charged to PACK like the index fetch is.
+    """
+    return token_bytes * elem_bits // 32 + scale_bytes_per_token
+
+
 def paged_decode_traffic(
     lengths,
     page_size: int,
@@ -145,30 +163,41 @@ def paged_decode_traffic(
     token_bytes: int,
     index_bytes: int = 4,
     granule_bytes: int = 32,
+    elem_bits: int = 32,
+    scale_bytes_per_token: int = 0,
 ) -> Traffic:
     """Traffic of one batched paged-KV decode step, BASE vs PACK.
 
-    * **BASE** is the serving system without indirection: a contiguous KV
-      cache padded to the maximum sequence length, so every decode step
-      streams ``batch × pages_per_seq × page_size`` token rows regardless of
-      how long each sequence actually is.  No index traffic.
+    * **BASE** is the serving system without indirection or packing: a
+      contiguous *full-width* KV cache padded to the maximum sequence
+      length, so every decode step streams ``batch × pages_per_seq ×
+      page_size`` token rows at ``token_bytes`` each regardless of sequence
+      length or element width — the narrow-beat penalty: a narrower element
+      still occupies a full-width slot.  No index traffic.
     * **PACK** is the paged path: only the mapped pages of each sequence move
-      (whole pages — the packing granule of this stream), and the page-table
-      entries are the indirect-stream index fetch.  The indices are resolved
-      near memory, so they are charged to ``index_bus_bytes_pack`` (the HBM
-      side), never to the core-side bus — but they do lower
-      ``pack_efficiency``, matching the r/(r+1) ceiling argument of §III-E.
-    * ``useful_bytes`` is the exact live KV: ``sum(lengths) × token_bytes``.
+      (whole pages — the packing granule of this stream) at the *packed*
+      width (:func:`packed_token_bytes` — ``elem_bits`` narrow elements
+      packed densely, plus the quantization-scale sideband), and the
+      page-table entries are the indirect-stream index fetch.  The indices
+      are resolved near memory, so they are charged to
+      ``index_bus_bytes_pack`` (the HBM side), never to the core-side bus —
+      but they do lower ``pack_efficiency``, matching the r/(r+1) ceiling
+      argument of §III-E.
+    * ``useful_bytes`` is the exact live KV at the packed width:
+      ``sum(lengths) × packed_token_bytes``.
 
-    ``token_bytes`` is the per-token KV footprint across everything a decode
-    step reads (K and V, all layers, all KV heads).
+    ``token_bytes`` is the FP32-equivalent per-token KV footprint across
+    everything a decode step reads (K and V, all layers, all KV heads);
+    ``elem_bits`` is the pool's element width (8 for int8 pools, which
+    quarters PACK bytes and the BASE efficiency alike).
     """
     lens = np.asarray(lengths, dtype=np.int64)
     batch = int(lens.shape[0])
+    packed = packed_token_bytes(token_bytes, elem_bits, scale_bytes_per_token)
     pages_touched = int(np.sum(-(-lens // page_size)))
-    useful = int(np.sum(lens)) * token_bytes
+    useful = int(np.sum(lens)) * packed
     base = batch * pages_per_seq * page_size * token_bytes
-    pack = pages_touched * page_size * token_bytes
+    pack = pages_touched * page_size * packed
     pack = int(np.ceil(pack / granule_bytes)) * granule_bytes if pack else 0
     idx = pages_touched * index_bytes
     idx = int(np.ceil(idx / granule_bytes)) * granule_bytes if idx else 0
@@ -206,6 +235,8 @@ def paged_prefill_traffic(
     token_bytes: int,
     index_bytes: int = 4,
     granule_bytes: int = 32,
+    elem_bits: int = 32,
+    scale_bytes_per_token: int = 0,
 ) -> Traffic:
     """Traffic of one batched chunked-prefill step, BASE vs PACK.
 
@@ -213,25 +244,31 @@ def paged_prefill_traffic(
     and its attention re-reads the context built so far.
 
     * **BASE** streams the full padded row per sequence for the context read
-      (``pages_per_seq × page_size`` tokens) plus one transaction granule per
-      written row — the packing-oblivious scatter.
+      (``pages_per_seq × page_size`` tokens at the full ``token_bytes``
+      width — narrow elements still occupy full-width slots) plus one
+      transaction granule per written row — the packing-oblivious scatter.
     * **PACK** reads only the pages covering ``starts + counts`` tokens,
       writes only the pages the chunk touches (whole pages, the stream's
-      packing granule), and fetches the corresponding page-table entries
-      near memory (``index_bus_bytes_pack``).
-    * ``useful_bytes`` is the live context read plus the rows written.
+      packing granule), both at the *packed* width
+      (:func:`packed_token_bytes`: ``elem_bits`` narrow elements packed
+      densely plus the quantization-scale sideband), and fetches the
+      corresponding page-table entries near memory
+      (``index_bus_bytes_pack``).
+    * ``useful_bytes`` is the live context read plus the rows written, at
+      the packed width.
     """
     st = np.asarray(starts, dtype=np.int64)
     ct = np.asarray(counts, dtype=np.int64)
     live = np.where(ct > 0, st + ct, 0)
+    packed = packed_token_bytes(token_bytes, elem_bits, scale_bytes_per_token)
     ctx, chunk = prefill_page_counts(starts, counts, page_size)
     ctx_pages = int(np.sum(ctx))
     chunk_pages = int(np.sum(chunk))
-    useful = int(np.sum(live) + np.sum(ct)) * token_bytes
+    useful = int(np.sum(live) + np.sum(ct)) * packed
     batch = int(np.count_nonzero(ct))
     base = (batch * pages_per_seq * page_size * token_bytes
             + int(np.sum(ct)) * granule_bytes)
-    pack = (ctx_pages + chunk_pages) * page_size * token_bytes
+    pack = (ctx_pages + chunk_pages) * page_size * packed
     pack = int(np.ceil(pack / granule_bytes)) * granule_bytes if pack else 0
     idx = (ctx_pages + chunk_pages) * index_bytes
     idx = int(np.ceil(idx / granule_bytes)) * granule_bytes if idx else 0

@@ -168,24 +168,38 @@ def page_table_streams(
     page_size: int,
     token_bytes: int,
     index_bits: int = 32,
+    kv_elem_bits: int = 32,
+    scale_bytes_per_token: int = 0,
 ) -> Tuple["IndirectStream", ...]:
     """Batched indirect-stream descriptors for a paged-KV decode step.
 
     A paged KV cache is the serving-side instance of the paper's indirect
     stream: the *element* is one physical KV page (``page_size`` tokens ×
-    ``token_bytes``), and the per-sequence page-table row is the memory-
-    resident index vector.  One :class:`IndirectStream` is returned per
-    sequence with a non-zero length, covering exactly the pages a decode
+    the packed per-token width), and the per-sequence page-table row is the
+    memory-resident index vector.  One :class:`IndirectStream` is returned
+    per sequence with a non-zero length, covering exactly the pages a decode
     step touches (``ceil(len / page_size)`` leading table entries).
+
+    ``token_bytes`` is the FP32-equivalent per-token footprint;
+    ``kv_elem_bits`` the real element width of the pool on the stream.
+    Narrow elements shrink the page element
+    (:func:`repro.core.packing.packed_token_bytes`): an int8 pool's page
+    descriptor carries a quarter of the fp32 bits plus the scale sideband —
+    the ``elements_per_beat`` packing factor quadrupling, visible in the
+    descriptor itself.
 
     The scheduler builds these descriptors each step and derives both the
     kernel operands (page ids / lengths) and the
     :func:`repro.core.packing.paged_decode_traffic` accounting from them, so
     the serving path and the Fig. 3 bus model share one source of truth.
     """
+    from .packing import packed_token_bytes
+
     pt = np.asarray(page_table)
     lens = np.asarray(lengths)
-    elem_bits = page_size * token_bytes * 8
+    elem_bits = page_size * packed_token_bytes(
+        token_bytes, kv_elem_bits, scale_bytes_per_token
+    ) * 8
     out = []
     for row, ln in zip(pt, lens):
         n = -(-int(ln) // page_size)
@@ -210,6 +224,8 @@ def prefill_table_streams(
     page_size: int,
     token_bytes: int,
     index_bits: int = 32,
+    kv_elem_bits: int = 32,
+    scale_bytes_per_token: int = 0,
 ) -> Tuple["IndirectStream", ...]:
     """Batched indirect-stream descriptors for one chunked-prefill step.
 
@@ -224,17 +240,22 @@ def prefill_table_streams(
       ``start .. start+count-1`` that ``paged_kv_write_chunk`` scatters
       through.
 
+    ``kv_elem_bits``/``scale_bytes_per_token`` shrink the page element for
+    narrow (int8) pools exactly as in :func:`page_table_streams`.
+
     Page math is shared with :func:`repro.core.packing.paged_prefill_traffic`
     via :func:`repro.core.packing.prefill_page_counts`, so the descriptors,
     the byte accounting, and the kernel's DMA walk are one source of truth.
     """
-    from .packing import prefill_page_counts
+    from .packing import packed_token_bytes, prefill_page_counts
 
     pt = np.asarray(page_table)
     st = np.asarray(starts)
     ct = np.asarray(counts)
     ctx, chunk = prefill_page_counts(st, ct, page_size)
-    elem_bits = page_size * token_bytes * 8
+    elem_bits = page_size * packed_token_bytes(
+        token_bytes, kv_elem_bits, scale_bytes_per_token
+    ) * 8
     out = []
     for row, s, n, nc, nw in zip(pt, st, ct, ctx, chunk):
         if n == 0:

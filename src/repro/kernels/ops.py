@@ -252,10 +252,20 @@ def paged_decode_attention(
     scale: Optional[float] = None,
     impl: str = "pallas",
 ) -> jax.Array:
+    """Decode one token per sequence against the paged pool.
+
+    ``k_scale``/``v_scale`` opt into the int8 pool layout: pages hold int8
+    codes and each ``(P, page, KVH)`` scale pool holds one fp32 scale per
+    page token slot per KV head (``ref.quantize_kv`` on the write side).
+    ``impl='pallas'`` dequantizes page-by-page in VMEM; ``impl='ref'``
+    dequantizes the whole pool up front through the shared
+    :func:`repro.kernels.ref.dequantize_pages` broadcast rule and runs the
+    full-precision oracle.
+    """
     if impl == "ref":
         if k_scale is not None:
-            k_pages = ref.int8_dequantize(k_pages, k_scale[..., None])
-            v_pages = ref.int8_dequantize(v_pages, v_scale[..., None])
+            k_pages = ref.dequantize_pages(k_pages, k_scale)
+            v_pages = ref.dequantize_pages(v_pages, v_scale)
         return ref.paged_decode_attention(
             q, k_pages, v_pages, page_table, lengths, scale=scale
         )
@@ -272,6 +282,8 @@ def paged_prefill_attention(
     ctx_rows: jax.Array,
     starts: jax.Array,
     counts: jax.Array,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
     scale: Optional[float] = None,
     impl: str = "pallas",
 ) -> jax.Array:
@@ -282,13 +294,24 @@ def paged_prefill_attention(
     dense score tensor in HBM; GQA grouped in-kernel); ``impl='ref'`` is the
     dense gather + einsum oracle (the pre-kernel serving path).  Rows with
     ``counts == 0`` produce zeros under both.
+
+    ``k_scale``/``v_scale`` opt into the int8 pool layout (same contract as
+    :func:`paged_decode_attention`): ``(P, page, KVH)`` fp32 scale pools, one
+    scale per page token slot per KV head.  The kernel dequantizes each
+    context page in VMEM right after its DMA (fp32 accumulation, identical
+    online-softmax structure); the ref path dequantizes the whole pool
+    through the shared :func:`repro.kernels.ref.dequantize_pages` rule.
     """
     if impl == "ref":
+        if k_scale is not None:
+            k_pages = ref.dequantize_pages(k_pages, k_scale)
+            v_pages = ref.dequantize_pages(v_pages, v_scale)
         return ref.paged_prefill_attention(
             q, k_pages, v_pages, ctx_rows, starts, counts, scale=scale
         )
     return paged_prefill_attention_kernel(
-        q, k_pages, v_pages, ctx_rows, starts, counts, scale=scale,
+        q, k_pages, v_pages, ctx_rows, starts, counts,
+        k_scale=k_scale, v_scale=v_scale, scale=scale,
         interpret=_interpret(),
     )
 
@@ -301,37 +324,66 @@ def paged_kv_append(
     page_table: jax.Array,
     lengths: jax.Array,
     active: Optional[jax.Array] = None,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
     impl: str = "pallas",
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
+):
     """Append one KV token per sequence into the paged pool.
 
     ``impl='pallas'`` routes the writes through the packed indirect-scatter
     converter kernel over the row-flattened pool (one indirect write burst
     per K and V); ``impl='ref'`` is the plain XLA scatter oracle.  Both drop
     inactive sequences by routing their index out of bounds.
+
+    Passing ``k_scale``/``v_scale`` — the ``(P, page, KVH)`` fp32 scale pools
+    of an int8 KV pool — turns this into *quantize-on-write*: the new rows
+    are quantized per (token, kv-head) over ``D`` (``ref.quantize_kv``), the
+    int8 codes scatter into the pages and the scales into the scale pools
+    through the **same** flat indices (one extra narrow indirect burst per
+    pool — the AXI-Pack picture: the value stream plus its sideband metadata
+    share one descriptor).  Returns ``(k_pages, v_pages, new_lengths)``,
+    plus ``(k_scale, v_scale)`` appended when quantizing.
     """
     if impl == "ref":
         return ref.paged_kv_append(
-            k_pages, v_pages, k_new, v_new, page_table, lengths, active
+            k_pages, v_pages, k_new, v_new, page_table, lengths, active,
+            k_scale=k_scale, v_scale=v_scale,
         )
     p, page, kvh, d = k_pages.shape
+    quantized = k_scale is not None
+    if quantized:
+        k_new, k_s = ref.quantize_kv(k_new)
+        v_new, v_s = ref.quantize_kv(v_new)
     slot = lengths // page
     off = lengths % page
-    pids = jnp.take_along_axis(page_table, slot[:, None], axis=1)[:, 0]
+    n_pages = page_table.shape[1]
+    pids = jnp.take_along_axis(
+        page_table, jnp.clip(slot, 0, n_pages - 1)[:, None], axis=1
+    )[:, 0]
     flat_idx = (pids * page + off).astype(jnp.int32)
     if active is None:
         active = jnp.ones_like(lengths, dtype=bool)
-    # Inactive rows target the scratch row appended below, then get dropped.
-    flat_idx = jnp.where(active, flat_idx, p * page)
+    # Inactive rows — and rows whose append position falls past their table
+    # row (the oracle's ``mode='drop'`` case: an un-clamped out-of-bounds
+    # gather would otherwise alias a real page) — target the scratch row
+    # appended below, then get dropped.
+    flat_idx = jnp.where(
+        active & (lengths < n_pages * page), flat_idx, p * page
+    )
 
-    def write(pool, new):
-        flat = jnp.pad(pool.reshape(p * page, kvh * d), ((0, 1), (0, 0)))
-        flat = indirect_scatter(flat, new.reshape(-1, kvh * d), flat_idx, impl=impl)
-        return flat[:-1].reshape(p, page, kvh, d)
+    def write(pool, new, width):
+        flat = jnp.pad(pool.reshape(p * page, width), ((0, 1), (0, 0)))
+        flat = indirect_scatter(flat, new.reshape(-1, width), flat_idx, impl=impl)
+        return flat[:-1]
 
-    k_pages = write(k_pages, k_new)
-    v_pages = write(v_pages, v_new)
-    return k_pages, v_pages, lengths + active.astype(lengths.dtype)
+    k_pages = write(k_pages, k_new, kvh * d).reshape(p, page, kvh, d)
+    v_pages = write(v_pages, v_new, kvh * d).reshape(p, page, kvh, d)
+    new_len = lengths + active.astype(lengths.dtype)
+    if quantized:
+        k_scale = write(k_scale, k_s, kvh).reshape(p, page, kvh)
+        v_scale = write(v_scale, v_s, kvh).reshape(p, page, kvh)
+        return k_pages, v_pages, new_len, k_scale, v_scale
+    return k_pages, v_pages, new_len
 
 
 def paged_kv_write_chunk(
@@ -342,8 +394,10 @@ def paged_kv_write_chunk(
     rows: jax.Array,
     starts: jax.Array,
     counts: jax.Array,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
     impl: str = "pallas",
-) -> Tuple[jax.Array, jax.Array]:
+):
     """Batched chunked-prefill write, bounded by the pages the chunk touches.
 
     ``impl='ref'`` is the full-pool scatter oracle.  ``impl='pallas'`` never
@@ -354,14 +408,28 @@ def paged_kv_write_chunk(
     indirect write) — R·W pages of traffic instead of the whole pool.
     Window slots that cover no valid token are routed out of bounds on the
     way back so a stale copy can never clobber another sequence's page.
+
+    Passing ``k_scale``/``v_scale`` — ``(P, page, KVH)`` fp32 scale pools —
+    turns this into *quantize-on-write* (same contract as
+    :func:`paged_kv_append`): the chunk is quantized per (token, kv-head)
+    over ``D``, the int8 codes go through the window gather/scatter above
+    and the scales through an identical (narrower) window walk over the
+    scale pools — same page ids, same local indices, same out-of-bounds
+    routing.  Returns ``(k_pages, v_pages)``, plus ``(k_scale, v_scale)``
+    appended when quantizing.
     """
     if impl == "ref":
         return ref.paged_kv_write_chunk(
-            k_pages, v_pages, k_new, v_new, rows, starts, counts
+            k_pages, v_pages, k_new, v_new, rows, starts, counts,
+            k_scale=k_scale, v_scale=v_scale,
         )
     p, page, kvh, d = k_pages.shape
     r, c = k_new.shape[:2]
     n_pages = rows.shape[1]
+    quantized = k_scale is not None
+    if quantized:
+        k_new, k_s = ref.quantize_kv(k_new)
+        v_new, v_s = ref.quantize_kv(v_new)
     w = -(-c // page) + 1
     p_lo = starts // page                                         # (R,)
     lp = p_lo[:, None] + jnp.arange(w, dtype=jnp.int32)           # (R, W)
@@ -378,23 +446,29 @@ def paged_kv_write_chunk(
     loc = (jnp.arange(r, dtype=jnp.int32)[:, None] * w + wp) * page + pos % page
     loc = jnp.where(valid, loc, r * w * page).reshape(-1)
 
-    def write(pool, new):
-        flat = pool.reshape(p, page * kvh * d)
+    def write(pool, new, width):
+        flat = pool.reshape(p, page * width)
         win = indirect_gather(
             flat, jnp.clip(pids, 0, p - 1).reshape(-1), impl=impl
         )                                                         # (R*W, ...)
         win = jnp.pad(
-            win.reshape(r * w * page, kvh * d), ((0, 1), (0, 0))
+            win.reshape(r * w * page, width), ((0, 1), (0, 0))
         )
-        win = indirect_scatter(win, new.reshape(-1, kvh * d), loc, impl=impl)
-        win = win[:-1].reshape(r * w, page * kvh * d)
+        win = indirect_scatter(win, new.reshape(-1, width), loc, impl=impl)
+        win = win[:-1].reshape(r * w, page * width)
         out = jnp.pad(flat, ((0, 1), (0, 0)))
         out = indirect_scatter(
             out, win, jnp.where(real, pids, p).reshape(-1), impl=impl
         )
-        return out[:-1].reshape(p, page, kvh, d)
+        return out[:-1]
 
-    return write(k_pages, k_new), write(v_pages, v_new)
+    kp = write(k_pages, k_new, kvh * d).reshape(p, page, kvh, d)
+    vp = write(v_pages, v_new, kvh * d).reshape(p, page, kvh, d)
+    if quantized:
+        ks = write(k_scale, k_s, kvh).reshape(p, page, kvh)
+        vs = write(v_scale, v_s, kvh).reshape(p, page, kvh)
+        return kp, vp, ks, vs
+    return kp, vp
 
 
 # ---------------------------------------------------------------------------

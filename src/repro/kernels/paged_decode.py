@@ -9,9 +9,12 @@ core never touches an address computation (the paper's element request
 generator, verbatim in Pallas).
 
 Supports an int8-quantized KV pool (per-(page-token, kv-head) scales): the
-TPU analogue of packing *narrower elements* onto the bus — halving HBM
-traffic for the bandwidth-bound decode step, exactly the paper's
-element-size argument in §III-E.
+TPU analogue of packing *narrower elements* onto the bus — a quarter of the
+fp32 HBM traffic (half of bf16) for the bandwidth-bound decode step,
+exactly the paper's element-size argument in §III-E.  The scale pages ride
+the same clamped index map as their K/V pages; the write side
+(``ops.paged_kv_append`` / ``ops.paged_kv_write_chunk`` with scale pools)
+quantizes on write through the same indices.
 """
 from __future__ import annotations
 

@@ -19,6 +19,12 @@ issue no DMAs, and out-of-context compute is skipped by the
 ``j·page < ctx_len`` predicate.  ``counts == 0`` padding rows clamp their
 entire walk to the row's first table entry — at most one warm-up page fetch
 (as with decode's empty sequences), never the tail — and output exact zeros.
+
+Supports int8-quantized pools exactly like decode: per-(page-token,
+kv-head) scale pages ride the same clamped index map as their K/V pages
+and dequant happens in VMEM before the fp32 accumulation — narrower
+elements packed onto the page stream, the paper's §III-E element-size
+argument (8-bit elements quadruple the FP32 packing factor).
 """
 from __future__ import annotations
 
@@ -42,8 +48,10 @@ def _prefill_body(
     used_ref,         # (R,) context-page count per row (ceil(ctx_len/page))
     # inputs
     q_ref,            # (1, C, H, D)
-    k_ref,            # (1, page, KVH, D)
+    k_ref,            # (1, page, KVH, D) — int8 codes when quantized
     v_ref,
+    k_scale_ref,      # (1, page, KVH) fp32 or None
+    v_scale_ref,
     # output
     o_ref,            # (1, C, H, D)
     # scratch
@@ -58,6 +66,7 @@ def _prefill_body(
     rep: int,
     d: int,
     scale: float,
+    quantized: bool,
 ):
     r = pl.program_id(0)
     j = pl.program_id(1)
@@ -78,6 +87,11 @@ def _prefill_body(
     def _update():
         k = k_ref[0].astype(jnp.float32)                  # (page, KVH, D)
         v = v_ref[0].astype(jnp.float32)
+        if quantized:
+            # Dequant in VMEM right after the page DMA (the narrow elements
+            # travelled the bus packed; same broadcast as dequantize_pages).
+            k = k * k_scale_ref[0].astype(jnp.float32)[..., None]
+            v = v * v_scale_ref[0].astype(jnp.float32)[..., None]
         q = q_ref[0].astype(jnp.float32)                  # (C, H, D)
         # Group queries per KV head: row (g, ci*rep + u) is query position ci
         # of head g*rep + u — GQA without materializing repeated K/V.
@@ -131,6 +145,8 @@ def paged_prefill_attention_kernel(
     ctx_rows: jax.Array,
     starts: jax.Array,
     counts: jax.Array,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
     scale: Optional[float] = None,
     interpret: bool = False,
 ) -> jax.Array:
@@ -140,13 +156,20 @@ def paged_prefill_attention_kernel(
                 absolute position ``starts[r] + c``
     k/v_pages:  (P, page, KVH, D) physical page pool (the chunk's K/V rows
                 must already be written — attention runs after the chunk
-                write, as in the serve engine)
+                write, as in the serve engine); int8 codes when
+                ``k_scale``/``v_scale`` given
     ctx_rows:   (R, ctx_pages) int32 leading page-table entries per row
     starts:     (R,) int32 absolute position of tokens[0]
     counts:     (R,) int32 valid tokens per row; ``counts[r] == 0`` rows are
                 padding and produce zero output (compute predicated off, the
                 walk clamped to the row's first table entry — at most one
                 warm-up page fetch, no NaNs)
+    k/v_scale:  optional (P, page, KVH) fp32 scale pools (one scale per page
+                token slot per KV head).  Each scale page rides the same
+                clamped index map as its K/V page — one extra narrow DMA per
+                grid step — and the dequant happens in VMEM before the fp32
+                flash accumulation, so the online-softmax structure is
+                unchanged.
 
     Query ``c`` of row ``r`` attends positions ``0 .. starts[r] + c`` capped
     at the row's written context (``starts[r] + counts[r]`` tokens), with an
@@ -157,6 +180,7 @@ def paged_prefill_attention_kernel(
     ctx_pages = ctx_rows.shape[1]
     rep = h // kvh
     scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    quantized = k_scale is not None
 
     flat_table = ctx_rows.reshape(-1).astype(jnp.int32)
     starts = starts.astype(jnp.int32)
@@ -171,7 +195,24 @@ def paged_prefill_attention_kernel(
         jj = jnp.minimum(j, used_ref[r_] - 1)
         return (pt_ref[r_ * ctx_pages + jj], 0, 0, 0)
 
+    def scale_idx(r_, j, pt_ref, st_ref, ct_ref, used_ref):
+        jj = jnp.minimum(j, used_ref[r_] - 1)
+        return (pt_ref[r_ * ctx_pages + jj], 0, 0)
+
     q_idx = lambda r_, j, pt, st, ct, us: (r_, 0, 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, c, h, d), q_idx),
+        pl.BlockSpec((1, page, kvh, d), table_idx),
+        pl.BlockSpec((1, page, kvh, d), table_idx),
+    ]
+    args = [q, k_pages, v_pages]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, page, kvh), scale_idx),
+            pl.BlockSpec((1, page, kvh), scale_idx),
+        ]
+        args += [k_scale, v_scale]
 
     body = functools.partial(
         _prefill_body,
@@ -182,15 +223,14 @@ def paged_prefill_attention_kernel(
         rep=rep,
         d=d,
         scale=scale,
+        quantized=quantized,
     )
+    if not quantized:
+        body = functools.partial(_drop_scale_refs, body)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
         grid=(r, ctx_pages),
-        in_specs=[
-            pl.BlockSpec((1, c, h, d), q_idx),
-            pl.BlockSpec((1, page, kvh, d), table_idx),
-            pl.BlockSpec((1, page, kvh, d), table_idx),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, c, h, d), q_idx),
         scratch_shapes=[
             pltpu.VMEM((c * h, 128), jnp.float32),
@@ -206,4 +246,10 @@ def paged_prefill_attention_kernel(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(flat_table, starts, counts, used, q, k_pages, v_pages)
+    )(flat_table, starts, counts, used, *args)
+
+
+def _drop_scale_refs(body, pt, st, ct, us, q_ref, k_ref, v_ref, o_ref, m_ref,
+                     l_ref, acc_ref):
+    return body(pt, st, ct, us, q_ref, k_ref, v_ref, None, None, o_ref,
+                m_ref, l_ref, acc_ref)

@@ -241,7 +241,9 @@ def paged_kv_append(
     page_table: jax.Array,
     lengths: jax.Array,
     active: Optional[jax.Array] = None,
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
+):
     """Append one KV token per sequence into the paged pool (oracle).
 
     The write side of the paged indirect stream: each sequence scatters its
@@ -252,10 +254,20 @@ def paged_kv_append(
     page_table: (B, pages_per_seq) int32; lengths: (B,) int32
     active:     (B,) bool — inactive sequences write nothing and keep their
                 length (their scatter is routed out of bounds and dropped).
+    k/v_scale:  optional (P, page, KVH) fp32 scale pools (the int8 pool
+                layout — see :func:`quantize_kv`).  When given, ``k_new`` /
+                ``v_new`` are quantized on write: the int8 codes land in the
+                pages, the per-(page-token, kv-head) scales in the scale
+                pools, through the *same* scatter indices.
 
-    Returns (k_pages, v_pages, new_lengths).
+    Returns ``(k_pages, v_pages, new_lengths)`` — plus ``(k_scale, v_scale)``
+    appended when quantizing.
     """
     p, page, _, _ = k_pages.shape
+    quantized = k_scale is not None
+    if quantized:
+        k_new, k_s = quantize_kv(k_new)
+        v_new, v_s = quantize_kv(v_new)
     slot = lengths // page
     off = lengths % page
     pids = jnp.take_along_axis(page_table, slot[:, None], axis=1)[:, 0]
@@ -265,7 +277,12 @@ def paged_kv_append(
     pids = jnp.where(active, pids, p)
     k_pages = k_pages.at[pids, off].set(k_new, mode="drop")
     v_pages = v_pages.at[pids, off].set(v_new, mode="drop")
-    return k_pages, v_pages, lengths + active.astype(lengths.dtype)
+    new_len = lengths + active.astype(lengths.dtype)
+    if quantized:
+        k_scale = k_scale.at[pids, off].set(k_s, mode="drop")
+        v_scale = v_scale.at[pids, off].set(v_s, mode="drop")
+        return k_pages, v_pages, new_len, k_scale, v_scale
+    return k_pages, v_pages, new_len
 
 
 def paged_kv_write_chunk(
@@ -276,7 +293,9 @@ def paged_kv_write_chunk(
     rows: jax.Array,
     starts: jax.Array,
     counts: jax.Array,
-) -> Tuple[jax.Array, jax.Array]:
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
+):
     """Scatter one prefill chunk per sequence into the paged pool (oracle).
 
     The batched write side of chunked prefill: sequence ``r`` writes its
@@ -286,13 +305,24 @@ def paged_kv_write_chunk(
     k/v_pages: (P, page, KVH, D) physical pool
     k/v_new:   (R, C, KVH, D)    chunk of new tokens per sequence
     rows:      (R, n_pages) int32 page-table rows; starts/counts: (R,) int32
+    k/v_scale: optional (P, page, KVH) fp32 scale pools.  When given, the
+               chunk is quantized on write (:func:`quantize_kv`): int8 codes
+               into the pages, per-(page-token, kv-head) scales into the
+               scale pools, through the same scatter indices.
 
     Rows with ``counts[r] == 0`` write nothing (their scatters are routed out
     of bounds and dropped), so the caller can pad the batch freely.
+
+    Returns ``(k_pages, v_pages)`` — plus ``(k_scale, v_scale)`` appended
+    when quantizing.
     """
     p, page, kvh, d = k_pages.shape
     r, c = k_new.shape[:2]
     n_pages = rows.shape[1]
+    quantized = k_scale is not None
+    if quantized:
+        k_new, k_s = quantize_kv(k_new)
+        v_new, v_s = quantize_kv(v_new)
     pos = starts[:, None] + jnp.arange(c, dtype=jnp.int32)          # (R, C)
     valid = jnp.arange(c, dtype=jnp.int32)[None, :] < counts[:, None]
     pids = jnp.take_along_axis(
@@ -304,7 +334,16 @@ def paged_kv_write_chunk(
     vf = v_pages.reshape(p * page, kvh, d)
     kf = kf.at[flat].set(k_new.reshape(-1, kvh, d), mode="drop")
     vf = vf.at[flat].set(v_new.reshape(-1, kvh, d), mode="drop")
-    return kf.reshape(p, page, kvh, d), vf.reshape(p, page, kvh, d)
+    k_pages = kf.reshape(p, page, kvh, d)
+    v_pages = vf.reshape(p, page, kvh, d)
+    if quantized:
+        ks = k_scale.reshape(p * page, kvh)
+        vs = v_scale.reshape(p * page, kvh)
+        ks = ks.at[flat].set(k_s.reshape(-1, kvh), mode="drop")
+        vs = vs.at[flat].set(v_s.reshape(-1, kvh), mode="drop")
+        return (k_pages, v_pages,
+                ks.reshape(p, page, kvh), vs.reshape(p, page, kvh))
+    return k_pages, v_pages
 
 
 # ---------------------------------------------------------------------------
@@ -383,3 +422,30 @@ def int8_quantize(x: jax.Array, axis: int = -1) -> Tuple[jax.Array, jax.Array]:
 
 def int8_dequantize(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
     return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-(token, kv-head) int8 quantization of new KV rows.
+
+    ``x`` has shape ``(..., KVH, D)``; each ``(..., kv-head)`` slice is
+    quantized symmetrically over its ``D`` components.  Returns the int8
+    codes (same shape) and the fp32 scales with the ``D`` axis dropped
+    (``(..., KVH)``) — exactly the scale-pool layout the paged kernels
+    prefetch (one scale per page token slot per KV head).
+    """
+    q, scale = int8_quantize(x, axis=-1)
+    return q, scale[..., 0]
+
+
+def dequantize_pages(
+    pages: jax.Array, scale: jax.Array, dtype=jnp.float32
+) -> jax.Array:
+    """Dequantize an int8 page pool with per-(page-token, kv-head) scales.
+
+    ``pages`` is ``(..., page, KVH, D)`` int8; ``scale`` is the matching
+    ``(..., page, KVH)`` fp32 pool (no ``D`` axis — one scale per token slot
+    per KV head).  The single scale-broadcast rule shared by every ``ref``
+    dequant fallback and mirrored element-wise inside the Pallas kernels'
+    VMEM dequant, so the oracle and kernel can never disagree on layout.
+    """
+    return int8_dequantize(pages, scale[..., None], dtype)

@@ -72,9 +72,18 @@ class PagedKVCache:
     ``lengths_host``/``page_table_host`` are host-side shadows of the device
     arrays, maintained by :class:`PagedLM` and ``allocate``/``release``; the
     scheduler reads them instead of syncing device state on the hot path.
+
+    ``kv_dtype='int8'`` allocates int8 K/V pools plus fp32 *scale pools*
+    (``k_scale``/``v_scale``, shape (L, P, page, KVH) — one scale per page
+    token slot per KV head, the layout of ``ref.quantize_kv``).  The scale
+    pools are donated alongside the K/V pools in every jitted entry point,
+    and page bookkeeping (allocate/trim/release) needs no extra work: a
+    physical page owns its scale rows, so remapping the page remaps its
+    scales — eviction/replay rebuilds both bit-for-bit through the same
+    quantize-on-write ops.
     """
 
-    k_pages: jax.Array     # (L, P, page, KVH, hd)
+    k_pages: jax.Array     # (L, P, page, KVH, hd) — int8 codes in int8 mode
     v_pages: jax.Array
     page_table: jax.Array  # (B, n_pages) physical ids
     lengths: jax.Array     # (B,)
@@ -82,24 +91,60 @@ class PagedKVCache:
     mapped: Optional[np.ndarray] = None  # (B,) pages currently mapped per slot
     lengths_host: Optional[np.ndarray] = None      # (B,) int32 shadow
     page_table_host: Optional[np.ndarray] = None   # (B, n_pages) int32 shadow
+    k_scale: Optional[jax.Array] = None  # (L, P, page, KVH) fp32, int8 mode
+    v_scale: Optional[jax.Array] = None
+
+    #: kv_dtype name → pool dtype (None = the config's compute dtype).
+    KV_DTYPES = {
+        "fp32": jnp.float32, "float32": jnp.float32,
+        "bf16": jnp.bfloat16, "bfloat16": jnp.bfloat16,
+        "int8": jnp.int8,
+    }
 
     @classmethod
     def create(cls, cfg: ArchConfig, batch: int, max_len: int, page: int = 64,
-               tp: int = 1, pool_pages: Optional[int] = None):
+               tp: int = 1, pool_pages: Optional[int] = None,
+               kv_dtype=None):
+        """``kv_dtype`` is a name from :attr:`KV_DTYPES`, an actual dtype
+        (e.g. a :class:`PagedLM`'s ``kv_dtype``, guaranteeing model/cache
+        agreement), or ``None`` for the config's compute dtype."""
         q_heads, kv_heads = cfg.heads_for_tp(tp)
         n_pages_seq = max_len // page
         pool = pool_pages if pool_pages is not None else batch * n_pages_seq
-        dt = cfg.compute_dtype
+        if kv_dtype is None:
+            dt = cfg.compute_dtype
+        elif isinstance(kv_dtype, str):
+            dt = cls.KV_DTYPES[kv_dtype]
+        else:
+            dt = jnp.dtype(kv_dtype).type
+        shape = (cfg.n_layers, pool, page, kv_heads, cfg.hd)
+        quantized = dt == jnp.int8
+        # Scale init of 1.0 matches ref.int8_quantize on all-zero rows, so an
+        # unwritten page dequantizes to exact zeros either way.
         return cls(
-            k_pages=jnp.zeros((cfg.n_layers, pool, page, kv_heads, cfg.hd), dt),
-            v_pages=jnp.zeros((cfg.n_layers, pool, page, kv_heads, cfg.hd), dt),
+            k_pages=jnp.zeros(shape, dt),
+            v_pages=jnp.zeros(shape, dt),
             page_table=jnp.zeros((batch, n_pages_seq), jnp.int32),
             lengths=jnp.zeros((batch,), jnp.int32),
             free=list(range(pool)),
             mapped=np.zeros((batch,), np.int64),
             lengths_host=np.zeros((batch,), np.int32),
             page_table_host=np.zeros((batch, n_pages_seq), np.int32),
+            k_scale=jnp.ones(shape[:-1], jnp.float32) if quantized else None,
+            v_scale=jnp.ones(shape[:-1], jnp.float32) if quantized else None,
         )
+
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
+
+    @property
+    def pool_bytes(self) -> int:
+        """Device bytes held by the K/V pools (scale pools included)."""
+        total = self.k_pages.nbytes + self.v_pages.nbytes
+        if self.quantized:
+            total += self.k_scale.nbytes + self.v_scale.nbytes
+        return total
 
     @property
     def page_size(self) -> int:
@@ -207,14 +252,19 @@ class PagedKVCache:
 # ---------------------------------------------------------------------------
 
 
-def _paged_lm_decode_step(params, tokens, k_pages, v_pages, page_table,
-                          lengths, active, *, h, kvh, hd, impl):
+def _paged_lm_decode_step(params, tokens, k_pages, v_pages, k_scale, v_scale,
+                          page_table, lengths, active, *, h, kvh, hd, impl):
     """One batched decode step against the paged pool.
 
     tokens (B,) int32; active (B,) bool — inactive slots write nothing, keep
     length 0 and produce zero attention.  Every array op is row-wise per
     sequence, so slot placement / batch composition never changes a
     sequence's bits.
+
+    ``k_scale``/``v_scale`` are the (L, P, page, KVH) fp32 scale pools of an
+    int8 KV pool, or ``None`` in full-precision mode: when given, the append
+    quantizes on write (codes + scales through the same indirect burst) and
+    attention dequantizes page-by-page in VMEM.
 
     The per-layer pool updates are collected and stacked once at the end
     (rather than chained through ``k_pages.at[l].set``), so the trace holds
@@ -224,58 +274,70 @@ def _paged_lm_decode_step(params, tokens, k_pages, v_pages, page_table,
     """
     n_layers = params["wq"].shape[0]
     b = tokens.shape[0]
+    quantized = k_scale is not None
     x = jnp.take(params["embed"], tokens, axis=0)          # (B, d)
     new_len = lengths + active.astype(lengths.dtype)
-    kps, vps = [], []
+    kps, vps, kss, vss = [], [], [], []
     for l in range(n_layers):
         q = (x @ params["wq"][l]).reshape(b, h, hd)
         kn = (x @ params["wk"][l]).reshape(b, kvh, hd)
         vn = (x @ params["wv"][l]).reshape(b, kvh, hd)
-        kp, vp, _ = kops.paged_kv_append(
+        scales = (dict(k_scale=k_scale[l], v_scale=v_scale[l])
+                  if quantized else {})
+        out = kops.paged_kv_append(
             k_pages[l], v_pages[l], kn, vn, page_table, lengths, active,
-            impl=impl,
+            impl=impl, **scales,
         )
+        kp, vp = out[0], out[1]
+        ks, vs = (out[3], out[4]) if quantized else (None, None)
         kps.append(kp)
         vps.append(vp)
+        kss.append(ks)
+        vss.append(vs)
         attn = kops.paged_decode_attention(
-            q, kp, vp, page_table, new_len, impl=impl
+            q, kp, vp, page_table, new_len, k_scale=ks, v_scale=vs, impl=impl
         )
         x = x + attn.reshape(b, h * hd) @ params["wo"][l]
     logits = x @ params["embed"].T                          # (B, vocab)
-    return logits, jnp.stack(kps), jnp.stack(vps), new_len
+    return (logits, jnp.stack(kps), jnp.stack(vps),
+            jnp.stack(kss) if quantized else None,
+            jnp.stack(vss) if quantized else None, new_len)
 
 
-def _paged_lm_decode_steps(params, tokens, k_pages, v_pages, page_table,
-                           lengths, active, *, n, vocab, h, kvh, hd, impl):
+def _paged_lm_decode_steps(params, tokens, k_pages, v_pages, k_scale,
+                           v_scale, page_table, lengths, active, *, n, vocab,
+                           h, kvh, hd, impl):
     """``n`` fused decode steps with on-device greedy sampling.
 
     One ``lax.scan`` launch: each step runs the single-step core, argmaxes
     its own logits on device, and feeds the sample back as the next input —
-    no logits or lengths ever cross to the host.  Returns the (n, B) token
-    matrix, the final feed token (``toks[-1]``, returned from inside the
-    graph so chained launches never slice on the host), and the updated
+    no logits or lengths ever cross to the host.  The scale pools (int8
+    mode) ride the scan carry next to the K/V pools.  Returns the (n, B)
+    token matrix, the final feed token (``toks[-1]``, returned from inside
+    the graph so chained launches never slice on the host), and the updated
     pools/lengths; bitwise identical to ``n`` sequential
     :func:`_paged_lm_decode_step` calls with host-side argmax.
     """
 
     def body(carry, _):
-        toks, kp, vp, lens = carry
-        logits, kp, vp, lens = _paged_lm_decode_step(
-            params, toks, kp, vp, page_table, lens, active,
+        toks, kp, vp, ks, vs, lens = carry
+        logits, kp, vp, ks, vs, lens = _paged_lm_decode_step(
+            params, toks, kp, vp, ks, vs, page_table, lens, active,
             h=h, kvh=kvh, hd=hd, impl=impl,
         )
         nxt = jnp.argmax(logits[:, :vocab], axis=-1).astype(jnp.int32)
-        return (nxt, kp, vp, lens), nxt
+        return (nxt, kp, vp, ks, vs, lens), nxt
 
-    (last, k_pages, v_pages, lengths), toks = jax.lax.scan(
-        body, (tokens, k_pages, v_pages, lengths), None, length=n
+    (last, k_pages, v_pages, k_scale, v_scale, lengths), toks = jax.lax.scan(
+        body, (tokens, k_pages, v_pages, k_scale, v_scale, lengths), None,
+        length=n,
     )
-    return toks, last, k_pages, v_pages, lengths
+    return toks, last, k_pages, v_pages, k_scale, v_scale, lengths
 
 
 def _paged_lm_prefill_batch(params, tokens, counts, seqs, starts, k_pages,
-                            v_pages, page_table, lengths, *, h, kvh, hd,
-                            page, ctx_pages, impl):
+                            v_pages, k_scale, v_scale, page_table, lengths,
+                            *, h, kvh, hd, page, ctx_pages, impl):
     """Advance every pending sequence by one prompt chunk, in one call.
 
     tokens (R, C) int32 (row r zero-padded past ``counts[r]``); ``seqs`` maps
@@ -293,26 +355,37 @@ def _paged_lm_prefill_batch(params, tokens, counts, seqs, starts, k_pages,
     an online softmax (no gathered context or dense score tensor); under
     ``impl='ref'`` the dense-einsum oracle runs, masked with a finite
     constant so ``counts == 0`` padding rows can never produce NaN softmax
-    outputs that poison the donated pools.  Returns the last *real* token's
+    outputs that poison the donated pools.  ``k_scale``/``v_scale`` (int8
+    mode, or ``None``) make the chunk write quantize-on-write and the
+    attention dequantize per context page.  Returns the last *real* token's
     logits per row plus the updated pools.
     """
     n_layers = params["wq"].shape[0]
     r, c = tokens.shape
+    quantized = k_scale is not None
     x = jnp.take(params["embed"], tokens, axis=0)          # (R, C, d)
     rows = jnp.take(page_table, seqs, axis=0)              # (R, n_pages)
     ctx_rows = rows[:, :ctx_pages]
-    kps, vps = [], []
+    kps, vps, kss, vss = [], [], [], []
     for l in range(n_layers):
         kn = (x @ params["wk"][l]).reshape(r, c, kvh, hd)
         vn = (x @ params["wv"][l]).reshape(r, c, kvh, hd)
-        kp, vp = kops.paged_kv_write_chunk(
-            k_pages[l], v_pages[l], kn, vn, rows, starts, counts, impl=impl
+        scales = (dict(k_scale=k_scale[l], v_scale=v_scale[l])
+                  if quantized else {})
+        out = kops.paged_kv_write_chunk(
+            k_pages[l], v_pages[l], kn, vn, rows, starts, counts,
+            impl=impl, **scales,
         )
+        kp, vp = out[0], out[1]
+        ks, vs = (out[2], out[3]) if quantized else (None, None)
         kps.append(kp)
         vps.append(vp)
+        kss.append(ks)
+        vss.append(vs)
         q = (x @ params["wq"][l]).reshape(r, c, h, hd)
         attn = kops.paged_prefill_attention(
-            q, kp, vp, ctx_rows, starts, counts, impl=impl
+            q, kp, vp, ctx_rows, starts, counts, k_scale=ks, v_scale=vs,
+            impl=impl,
         )
         x = x + attn.astype(x.dtype).reshape(r, c, h * hd) @ params["wo"][l]
     last = jnp.take_along_axis(
@@ -324,7 +397,9 @@ def _paged_lm_prefill_batch(params, tokens, counts, seqs, starts, k_pages,
     new_len = lengths.at[jnp.where(counts > 0, seqs, b)].set(
         (starts + counts).astype(lengths.dtype), mode="drop"
     )
-    return last @ params["embed"].T, jnp.stack(kps), jnp.stack(vps), new_len
+    return (last @ params["embed"].T, jnp.stack(kps), jnp.stack(vps),
+            jnp.stack(kss) if quantized else None,
+            jnp.stack(vss) if quantized else None, new_len)
 
 
 class PagedLM:
@@ -341,6 +416,13 @@ class PagedLM:
     Every jitted entry point donates the page pools, and the wrappers keep
     the cache's host shadows (``lengths_host``) in step arithmetically, so
     calling code never needs to read device state back.
+
+    ``kv_dtype='int8'`` serves from quantized page pools: K/V rows are
+    quantized on write (per-(token, kv-head) scales into the donated scale
+    pools) and both attention kernels dequantize page-by-page in VMEM — the
+    serving analogue of packing narrower elements onto a fixed-width bus
+    (packing factor ``bus/elem``: 8-bit elements quadruple the FP32 factor).
+    The matching cache must be created with the same ``kv_dtype``.
     """
 
     #: Max resident jitted prefill programs.  Each distinct ``(page, ctx)``
@@ -349,9 +431,14 @@ class PagedLM:
     PREFILL_CACHE_CAP = 8
 
     def __init__(self, cfg: ArchConfig, key: jax.Array, impl: str = "pallas",
-                 prefill_cache_cap: Optional[int] = None):
+                 prefill_cache_cap: Optional[int] = None,
+                 kv_dtype: Optional[str] = None):
         self.cfg = cfg
         self.impl = impl
+        self.kv_dtype = (
+            PagedKVCache.KV_DTYPES[kv_dtype] if kv_dtype is not None
+            else cfg.compute_dtype
+        )
         h, kvh = cfg.heads_for_tp(1)
         self.h, self.kvh, self.hd = h, kvh, cfg.hd
         d, L = cfg.d_model, cfg.n_layers
@@ -380,25 +467,50 @@ class PagedLM:
         return jax.jit(functools.partial(
             _paged_lm_decode_step, h=self.h, kvh=self.kvh, hd=self.hd,
             impl=self.impl,
-        ), donate_argnums=(2, 3))
+        ), donate_argnums=(2, 3, 4, 5))
 
     @functools.cached_property
     def _decode_many(self):
         return jax.jit(functools.partial(
             _paged_lm_decode_steps, vocab=self.cfg.vocab, h=self.h,
             kvh=self.kvh, hd=self.hd, impl=self.impl,
-        ), static_argnames=("n",), donate_argnums=(2, 3))
+        ), static_argnames=("n",), donate_argnums=(2, 3, 4, 5))
 
     def _prefill(self, page: int, ctx_pages: int):
         return jax.jit(functools.partial(
             _paged_lm_prefill_batch, h=self.h, kvh=self.kvh, hd=self.hd,
             page=page, ctx_pages=ctx_pages, impl=self.impl,
-        ), donate_argnums=(5, 6))
+        ), donate_argnums=(5, 6, 7, 8))
+
+    @property
+    def quantized(self) -> bool:
+        return self.kv_dtype == jnp.int8
 
     @functools.cached_property
     def kv_token_bytes(self) -> int:
-        """Bytes a decode step reads per live KV token (K+V, all layers)."""
+        """FP32-equivalent bytes per live KV token (K+V, all layers).
+
+        This is the *full-width* footprint — what a packing-oblivious BASE
+        server streams per token regardless of the pool's element width.
+        The packed width is derived from it via :attr:`kv_elem_bits` and
+        :attr:`kv_scale_token_bytes` (see
+        ``repro.core.packing.packed_token_bytes``).
+        """
         return 2 * self.cfg.n_layers * self.kvh * self.hd * 4
+
+    @functools.cached_property
+    def kv_elem_bits(self) -> int:
+        """Element width of the KV pools on the stream (32/16/8 bits)."""
+        return jnp.dtype(self.kv_dtype).itemsize * 8
+
+    @functools.cached_property
+    def kv_scale_token_bytes(self) -> int:
+        """Sideband scale bytes PACK moves per live KV token (int8 mode).
+
+        One fp32 scale per (token, kv-head) per pool per layer; zero in
+        full-precision modes.
+        """
+        return 2 * self.cfg.n_layers * self.kvh * 4 if self.quantized else 0
 
     # -- decode --------------------------------------------------------------
 
@@ -413,13 +525,15 @@ class PagedLM:
         the passed-in cache's device arrays must not be reused."""
         act_host = np.asarray(active)
         with _donation_noop_ok():
-            logits, kp, vp, new_len = self._decode(
+            logits, kp, vp, ks, vs, new_len = self._decode(
                 self.params, jnp.asarray(tokens), cache.k_pages,
-                cache.v_pages, cache.page_table, cache.lengths,
+                cache.v_pages, cache.k_scale, cache.v_scale,
+                cache.page_table, cache.lengths,
                 jnp.asarray(active),
             )
         cache = dataclasses.replace(
-            cache, k_pages=kp, v_pages=vp, lengths=new_len,
+            cache, k_pages=kp, v_pages=vp, k_scale=ks, v_scale=vs,
+            lengths=new_len,
             lengths_host=self._shift_lengths(cache, act_host, 1),
         )
         return logits, cache
@@ -433,13 +547,15 @@ class PagedLM:
         """
         act_host = np.asarray(active)
         with _donation_noop_ok():
-            toks, _, kp, vp, new_len = self._decode_many(
+            toks, _, kp, vp, ks, vs, new_len = self._decode_many(
                 self.params, jnp.asarray(tokens), cache.k_pages,
-                cache.v_pages, cache.page_table, cache.lengths,
+                cache.v_pages, cache.k_scale, cache.v_scale,
+                cache.page_table, cache.lengths,
                 jnp.asarray(active), n=n,
             )
         cache = dataclasses.replace(
-            cache, k_pages=kp, v_pages=vp, lengths=new_len,
+            cache, k_pages=kp, v_pages=vp, k_scale=ks, v_scale=vs,
+            lengths=new_len,
             lengths_host=self._shift_lengths(cache, act_host, n),
         )
         return toks, cache
@@ -456,21 +572,23 @@ class PagedLM:
         act_dev = jnp.asarray(active)
         feed = jnp.asarray(tokens)
         kp, vp = cache.k_pages, cache.v_pages
+        ks, vs = cache.k_scale, cache.v_scale
         lens = cache.lengths
         parts = []
         rem = n
         with _donation_noop_ok():
             while rem:
                 m = 1 << (rem.bit_length() - 1)
-                toks, feed, kp, vp, lens = self._decode_many(
-                    self.params, feed, kp, vp, cache.page_table, lens,
-                    act_dev, n=m,
+                toks, feed, kp, vp, ks, vs, lens = self._decode_many(
+                    self.params, feed, kp, vp, ks, vs, cache.page_table,
+                    lens, act_dev, n=m,
                 )
                 parts.append(toks)
                 rem -= m
         out = np.concatenate([np.asarray(t) for t in parts], axis=0)  # sync
         cache = dataclasses.replace(
-            cache, k_pages=kp, v_pages=vp, lengths=lens,
+            cache, k_pages=kp, v_pages=vp, k_scale=ks, v_scale=vs,
+            lengths=lens,
             lengths_host=self._shift_lengths(cache, act_host, n),
         )
         return out, cache
@@ -505,11 +623,11 @@ class PagedLM:
         else:
             self._prefill_cache.move_to_end(key)
         with _donation_noop_ok():
-            logits, kp, vp, new_len = fn(
+            logits, kp, vp, ks, vs, new_len = fn(
                 self.params, jnp.asarray(tokens), jnp.asarray(counts),
                 jnp.asarray(slots), jnp.asarray(starts),
-                cache.k_pages, cache.v_pages, cache.page_table,
-                cache.lengths,
+                cache.k_pages, cache.v_pages, cache.k_scale, cache.v_scale,
+                cache.page_table, cache.lengths,
             )
         real = counts > 0
         lens_host = cache.lengths_host
@@ -517,8 +635,8 @@ class PagedLM:
             lens_host = lens_host.copy()
             lens_host[slots[real]] = (starts + counts)[real]
         cache = dataclasses.replace(
-            cache, k_pages=kp, v_pages=vp, lengths=new_len,
-            lengths_host=lens_host,
+            cache, k_pages=kp, v_pages=vp, k_scale=ks, v_scale=vs,
+            lengths=new_len, lengths_host=lens_host,
         )
         return logits, cache
 

@@ -48,7 +48,10 @@ Scheduling policy (vLLM-shaped, deliberately simple and deterministic):
 Every decode step records a :class:`repro.core.packing.Traffic`: BASE is the
 padded contiguous cache a packing-oblivious server would stream, PACK is the
 mapped pages plus the near-memory page-table fetch — connecting serving
-throughput back to the Fig. 3 bus model.
+throughput back to the Fig. 3 bus model.  Under int8 page pools
+(``kv_dtype='int8'`` on both the model and cache) the records carry the
+8-bit element width, so PACK shows the quadrupled packing factor while
+BASE keeps full-width slots (the narrow-beat penalty).
 """
 from __future__ import annotations
 
@@ -244,6 +247,15 @@ class Scheduler:
     """Continuous-batching scheduler driving a :class:`PagedLM`."""
 
     def __init__(self, model: PagedLM, cache: PagedKVCache, chunk: int = 8):
+        # Element width drives the traffic accounting AND the math the model
+        # runs, so any model/cache width mismatch (not just int8-vs-float)
+        # must fail loudly rather than mis-report PACK bytes.
+        if jnp.dtype(model.kv_dtype) != jnp.dtype(cache.k_pages.dtype):
+            raise ValueError(
+                f"model kv_dtype ({jnp.dtype(model.kv_dtype).name}) does not "
+                f"match the cache pool dtype ({cache.k_pages.dtype.name}): "
+                "create both with the same kv_dtype"
+            )
         self.model = model
         self.cache = cache
         self.chunk = chunk
@@ -389,7 +401,9 @@ class Scheduler:
                 if r.on_token:
                     r.on_token(r, tok)
         # Stream descriptors + traffic from the same host-shadow page math
-        # the kernel's scalar-prefetch walk resolves (as decode does).
+        # the kernel's scalar-prefetch walk resolves (as decode does).  The
+        # model's element width (8-bit for int8 pools) flows into both, so
+        # PACK reflects the real packed bytes on the bus.
         table = (self.cache.page_table_host
                  if self.cache.page_table_host is not None
                  else np.asarray(self.cache.page_table))
@@ -401,11 +415,15 @@ class Scheduler:
                 starts[:n], counts[:n],
                 self.cache.page_size, self.cache.pages_per_seq,
                 self.model.kv_token_bytes,
+                elem_bits=self.model.kv_elem_bits,
+                scale_bytes_per_token=self.model.kv_scale_token_bytes,
             ),
             streams=prefill_table_streams(
                 table[slots[:n]],  # fancy indexing: bounded per-row copy
                 starts[:n], counts[:n],
                 self.cache.page_size, self.model.kv_token_bytes,
+                kv_elem_bits=self.model.kv_elem_bits,
+                scale_bytes_per_token=self.model.kv_scale_token_bytes,
             ),
         ))
 
@@ -468,10 +486,14 @@ class Scheduler:
             streams = page_table_streams(
                 table, step_lens,
                 self.cache.page_size, self.model.kv_token_bytes,
+                kv_elem_bits=self.model.kv_elem_bits,
+                scale_bytes_per_token=self.model.kv_scale_token_bytes,
             )
             traffic = paged_decode_traffic(
                 step_lens[step_lens > 0], self.cache.page_size,
                 self.cache.pages_per_seq, self.model.kv_token_bytes,
+                elem_bits=self.model.kv_elem_bits,
+                scale_bytes_per_token=self.model.kv_scale_token_bytes,
             )
             new_tokens = 0
             for r in running:

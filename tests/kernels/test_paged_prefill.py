@@ -126,6 +126,65 @@ def test_unmapped_tail_pages_issue_no_dmas():
     assert np.isfinite(np.asarray(got)).all()
 
 
+@pytest.mark.parametrize("h,kvh", [(4, 4), (8, 2)])
+def test_int8_pool_matches_dequantized_ref(h, kvh):
+    """Int8 pool + per-(page-token, kv-head) scale pools: the kernel's
+    in-VMEM dequant must match the oracle running on the fully dequantized
+    pool (the shared ``dequantize_pages`` broadcast rule) — exercising the
+    scale pages through the same clamped index map as the K/V pages."""
+    from repro.kernels import ref
+
+    rng = np.random.default_rng(6)
+    q, kp, vp, rows = _case(rng, r=3, c=8, h=h, kvh=kvh, d=32,
+                            pool=16, page=4, ctx=4)
+    kq, ks = ref.quantize_kv(kp)
+    vq, vs = ref.quantize_kv(vp)
+    starts = jnp.asarray([0, 6, 3], jnp.int32)
+    counts = jnp.asarray([8, 8, 0], jnp.int32)    # incl. a padding row
+    got = ops.paged_prefill_attention(
+        q, kq, vq, rows, starts, counts, k_scale=ks, v_scale=vs,
+        impl="pallas",
+    )
+    want = ops.paged_prefill_attention(
+        q, ref.dequantize_pages(kq, ks), ref.dequantize_pages(vq, vs),
+        rows, starts, counts, impl="ref",
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    assert np.abs(np.asarray(got)[2]).max() == 0.0
+
+
+def test_int8_unmapped_tail_pages_issue_no_dmas():
+    """The poison-page guarantee holds for the scale pages too: tail table
+    entries pointing at a NaN-scale page are never fetched."""
+    from repro.kernels import ref
+
+    rng = np.random.default_rng(7)
+    pool, page, kvh, d, h, c = 10, 4, 2, 16, 4, 4
+    kp, vp = _pool(rng, pool, page, kvh, d)
+    kq, ks = ref.quantize_kv(kp)
+    vq, vs = ref.quantize_kv(vp)
+    poison = pool - 1
+    kq = kq.at[poison].set(127)
+    ks = ks.at[poison].set(jnp.nan)
+    vs = vs.at[poison].set(jnp.nan)
+    q = jnp.asarray(rng.normal(size=(1, c, h, d)), jnp.float32)
+    clean = jnp.asarray([[0, 1, 2, 3]], jnp.int32)
+    starts = jnp.asarray([0], jnp.int32)
+    counts = jnp.asarray([4], jnp.int32)           # uses 1 ctx page
+    want = ops.paged_prefill_attention(
+        q, kq, vq, clean, starts, counts, k_scale=ks, v_scale=vs, impl="ref"
+    )
+    dirty = clean.at[0, 1:].set(poison)
+    got = ops.paged_prefill_attention(
+        q, kq, vq, dirty, starts, counts, k_scale=ks, v_scale=vs,
+        impl="pallas",
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    assert np.isfinite(np.asarray(got)).all()
+
+
 def test_fp32_accumulation_under_bf16_inputs():
     """bf16 q/kv still accumulate the softmax and pv products in fp32."""
     rng = np.random.default_rng(5)

@@ -1,0 +1,106 @@
+"""Docs link checker (CI gate).
+
+Two guarantees over `README.md` and `docs/*.md`:
+
+1. every **relative markdown link** resolves to an existing file (anchors
+   stripped; external http(s)/mailto links are ignored), and
+2. every **code entity the docs name** exists: backticked ``*.py`` paths
+   must exist on disk (resolved against the repo root and ``src/repro/``),
+   and backticked dotted names rooted in a known module (``ops.x``,
+   ``ref.x``, ``repro.a.b.c``) must import/getattr cleanly.
+
+Run from the repo root: ``PYTHONPATH=src python tools/check_links.py``
+"""
+from __future__ import annotations
+
+import importlib
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_RE = re.compile(r"`([^`\n]+)`")
+PATH_RE = re.compile(r"^[\w./-]+\.(?:py|md|json|txt|yml)$")
+DOTTED_RE = re.compile(r"^(ops|ref|repro(?:\.\w+)+)\.(\w+)$")
+
+MODULE_ALIASES = {
+    "ops": "repro.kernels.ops",
+    "ref": "repro.kernels.ref",
+}
+
+
+def md_files():
+    yield ROOT / "README.md"
+    yield from sorted((ROOT / "docs").glob("*.md"))
+
+
+def check_rel_links(md: pathlib.Path, text: str, errors: list):
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not (md.parent / rel).exists():
+            errors.append(f"{md.relative_to(ROOT)}: broken link -> {target}")
+
+
+def resolve_path_token(token: str) -> bool:
+    candidates = [ROOT / token, ROOT / "src" / "repro" / token]
+    return any(c.exists() for c in candidates)
+
+
+def resolve_dotted(token: str) -> bool:
+    m = DOTTED_RE.match(token)
+    mod_name, attr = m.group(1), m.group(2)
+    mod_name = MODULE_ALIASES.get(mod_name, mod_name)
+    try:
+        mod = importlib.import_module(mod_name)
+    except ImportError:
+        # repro.a.b.c.attr may split as module=repro.a.b, attr-chain=c.attr
+        parts = mod_name.rsplit(".", 1)
+        try:
+            mod = importlib.import_module(parts[0])
+            mod = getattr(mod, parts[1])
+        except (ImportError, AttributeError):
+            return False
+    return hasattr(mod, attr)
+
+
+def check_code_tokens(md: pathlib.Path, text: str, errors: list):
+    for token in CODE_RE.findall(text):
+        token = token.strip().rstrip("()")
+        if PATH_RE.match(token) and "/" in token:
+            if not resolve_path_token(token):
+                errors.append(
+                    f"{md.relative_to(ROOT)}: file not found -> `{token}`"
+                )
+        elif DOTTED_RE.match(token):
+            if not resolve_dotted(token):
+                errors.append(
+                    f"{md.relative_to(ROOT)}: unresolvable name -> `{token}`"
+                )
+
+
+def main() -> int:
+    errors: list = []
+    n_files = 0
+    for md in md_files():
+        text = md.read_text()
+        n_files += 1
+        check_rel_links(md, text, errors)
+        if md.parent.name == "docs":
+            check_code_tokens(md, text, errors)
+    if errors:
+        print(f"link check FAILED ({len(errors)} problem(s)):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"link check OK: {n_files} markdown files")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
