@@ -138,6 +138,27 @@ def main() -> None:
               f"pack_eff={row['pack_eff']:.1%},base_eff={row['base_eff']:.1%},"
               f"prefill_pack_eff={row['prefill_pack_eff']:.1%}")
 
+    # ---- Serving, prefix sharing: refcounted pages + CoW ----------------
+    # Batches repeating one page-aligned system prompt: shared pages admit
+    # by refcount bump (PACK moves only remapped table indices), the
+    # divergent tails prefill normally, and the row asserts bit-for-bit
+    # output equality against a non-sharing scheduler.
+    from .serving import shared_prefix_rows
+    print("\n# Serving shared-prefix: prefill tokens saved via refcounted "
+          "page sharing (outputs bit-for-bit vs non-sharing)")
+    prows = shared_prefix_rows(quick=args.quick)
+    for row in prows:
+        print(f"serving_shared_prefix,b={row['batch']},"
+              f"prompt_tokens={row['prompt_tokens']},"
+              f"saved={row['prefill_tokens_saved']},"
+              f"saved_frac={row['saved_frac']:.1%},"
+              f"shared_pages={row['shared_pages']},"
+              f"cow_copies={row['cow_copies']},"
+              f"pack_eff={row['prefill_pack_eff']:.1%},"
+              f"effective_pack_eff={row['effective_pack_eff']:.1%},"
+              f"plain_pack_eff={row['plain_pack_eff']:.1%},"
+              f"outputs_match={row['outputs_match']}")
+
     if args.json:
         def _json_row(r):
             return {
@@ -176,6 +197,7 @@ def main() -> None:
                     ),
                 ) for r in irows],
             },
+            "serving_shared_prefix": {"rows": prows},
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

@@ -224,6 +224,13 @@ def simulate_words(
 
 def simulate_stream(stream: StreamDescriptor, cfg: BankConfig) -> SimResult:
     """Simulate one packed stream through the endpoint."""
+    if getattr(stream, "remap_only", False):
+        # Prefix-sharing remap: no element payload crosses the endpoint —
+        # only the contiguous index-line fetch (the table entries being
+        # repointed) drains through the banks.
+        assert isinstance(stream, IndirectStream)
+        n_words = math.ceil(stream.count * stream.index_bits / cfg.word_bits)
+        return simulate_words(np.arange(n_words, dtype=np.int64), cfg)
     words = word_addresses(stream, cfg.word_bits)
     if stream.kind is BurstKind.INDIRECT:
         assert isinstance(stream, IndirectStream)

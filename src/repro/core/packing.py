@@ -29,6 +29,7 @@ __all__ = [
     "paged_decode_traffic",
     "prefill_page_counts",
     "paged_prefill_traffic",
+    "prefix_share_traffic",
 ]
 
 
@@ -93,7 +94,11 @@ class Traffic:
     ``base_bytes`` counts one full bus/transaction granule per element (the
     narrow-beat penalty); ``pack_bytes`` counts densely packed lines;
     ``index_bus_bytes`` is index traffic crossing the core-side bus (zero for
-    PACK, whose indirection is endpoint-side).
+    PACK, whose indirection is endpoint-side).  ``shared_pages`` counts
+    physical pages this transfer *reused* instead of re-writing (prefix
+    sharing): reuse moves no payload, so those records show
+    ``pack_bytes == 0`` while ``useful_bytes`` stays the full value — the
+    dedup-before-packing multiplier of the irredundant-layout argument.
     """
 
     useful_bytes: int
@@ -101,6 +106,7 @@ class Traffic:
     pack_bytes: int
     index_bus_bytes_base: int
     index_bus_bytes_pack: int = 0
+    shared_pages: int = 0
 
     @property
     def base_efficiency(self) -> float:
@@ -273,3 +279,43 @@ def paged_prefill_traffic(
     idx = (ctx_pages + chunk_pages) * index_bytes
     idx = int(np.ceil(idx / granule_bytes)) * granule_bytes if idx else 0
     return Traffic(useful, base, pack, 0, idx)
+
+
+def prefix_share_traffic(
+    shared_tokens: int,
+    n_pages: int,
+    page_size: int,
+    token_bytes: int,
+    index_bytes: int = 4,
+    granule_bytes: int = 32,
+    elem_bits: int = 32,
+    scale_bytes_per_token: int = 0,
+) -> Traffic:
+    """Traffic of mapping an already-resident prompt prefix, BASE vs PACK.
+
+    When admission finds ``n_pages`` page-aligned prefix pages already in
+    the pool, the sharing path moves *no KV payload* — it bumps refcounts
+    and fetches the ``n_pages`` page-table entries it repoints (charged to
+    ``index_bus_bytes_pack``, near-memory like every other table fetch).
+
+    * **BASE** is the dedup-oblivious server: it re-prefills the prefix, so
+      it streams ``shared_tokens`` full-width KV writes (one transaction
+      granule per row, the packing-oblivious scatter — the write half of
+      :func:`paged_prefill_traffic`'s BASE, which is exactly the work
+      sharing elides; the context re-reads it also skips are already
+      reflected in the *absent* prefill records).
+    * **PACK** moves only the table fetch: ``pack_bytes == 0``.
+    * ``useful_bytes`` is the prefix KV at the packed width — the bytes the
+      pool now serves without them ever crossing the bus again.
+
+    ``pack_efficiency`` of such a record is ``useful / index`` and typically
+    far exceeds 1: that is the dedup multiplier on top of packing, and why
+    :class:`Traffic` carries ``shared_pages`` so aggregates can report it
+    separately rather than silently inflating the packing ratio.
+    """
+    packed = packed_token_bytes(token_bytes, elem_bits, scale_bytes_per_token)
+    useful = shared_tokens * packed
+    base = shared_tokens * max(token_bytes, granule_bytes)
+    idx = n_pages * index_bytes
+    idx = int(np.ceil(idx / granule_bytes)) * granule_bytes if idx else 0
+    return Traffic(useful, base, 0, 0, idx, shared_pages=n_pages)

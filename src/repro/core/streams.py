@@ -35,6 +35,7 @@ __all__ = [
     "beats_for",
     "page_table_streams",
     "prefill_table_streams",
+    "share_table_streams",
 ]
 
 
@@ -134,10 +135,15 @@ class IndirectStream(StreamDescriptor):
       indices: int array of ``count`` element offsets (relative to ``base``).
       index_bits: index element width (8/16/32), which sets the element:index
         ratio r and the r/(r+1) utilization ceiling of §III-E.
+      remap_only: the stream repoints table entries without moving element
+        payload (prefix sharing): only the index fetch touches memory.  The
+        element fields still describe the pages being reused, so accounting
+        can value the remap, but simulators must drain just the index lines.
     """
 
     indices: Optional[np.ndarray] = None
     index_bits: int = 32
+    remap_only: bool = False
 
     def __post_init__(self):
         object.__setattr__(self, "kind", BurstKind.INDIRECT)
@@ -282,6 +288,43 @@ def prefill_table_streams(
             )
         )
     return tuple(out)
+
+
+def share_table_streams(
+    page_ids: Sequence[int],
+    page_size: int,
+    token_bytes: int,
+    index_bits: int = 32,
+    kv_elem_bits: int = 32,
+    scale_bytes_per_token: int = 0,
+) -> Tuple["IndirectStream", ...]:
+    """Descriptor for mapping an already-resident prompt prefix (dedup).
+
+    The admission-time sibling of :func:`page_table_streams`: when a new
+    request's page-aligned prompt prefix is already in the pool, the only
+    memory operation is fetching the ``len(page_ids)`` table entries being
+    repointed — no KV payload moves.  The returned stream is ``remap_only``;
+    its element fields still carry the packed page width so the byte value
+    of the reuse (:func:`repro.core.packing.prefix_share_traffic`) and the
+    descriptor agree on what was deduplicated.
+    """
+    from .packing import packed_token_bytes
+
+    if not len(page_ids):
+        return ()
+    elem_bits = page_size * packed_token_bytes(
+        token_bytes, kv_elem_bits, scale_bytes_per_token
+    ) * 8
+    return (
+        IndirectStream(
+            base=0,
+            elem_bits=elem_bits,
+            count=len(page_ids),
+            indices=np.asarray(page_ids, dtype=np.int64),
+            index_bits=index_bits,
+            remap_only=True,
+        ),
+    )
 
 
 def word_addresses(

@@ -1,6 +1,7 @@
 """Serving: prefill/decode engine, paged KV pool, continuous batching."""
 from .engine import OutOfPages, PagedKVCache, PagedLM, ServeEngine
 from .scheduler import (
+    PrefixIndex,
     Request,
     RequestState,
     Scheduler,

@@ -60,14 +60,37 @@ def _donation_noop_ok():
         yield
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _copy_pool_page(pool: jax.Array, src, dst) -> jax.Array:
+    """``pool[:, dst] = pool[:, src]`` across all layers, in place.
+
+    ``src``/``dst`` are traced scalars, so every copy-on-write page copy
+    reuses one compiled program per pool shape/dtype; donation lets XLA
+    alias the update into the resident pool instead of cloning it.
+    """
+    return pool.at[:, dst].set(pool[:, src])
+
+
 @dataclasses.dataclass
 class PagedKVCache:
     """Physical page pool + per-sequence page tables (one per layer stack).
 
     The dataclass is *functional*: ``allocate``/``release`` copy every piece
     of host bookkeeping they touch before writing (``free``, ``mapped``,
-    ``lengths_host``, ``page_table_host``) and return a new cache, so a
-    retained older cache object is never corrupted by later calls.
+    ``lengths_host``, ``page_table_host``, ``refcounts``) and return a new
+    cache, so a retained older cache object is never corrupted by later
+    calls.  (Exception: :meth:`ensure_writable` dispatches device page
+    copies with the pools donated, matching the contract of every jitted
+    model entry point — after calling it, the old cache's device arrays
+    must not be reused.)
+
+    ``refcounts`` makes pages shareable: each physical page counts its
+    owners (page-table mappings plus prefix-index retentions) and is
+    returned to ``free`` only when the count hits zero.  ``share`` maps
+    another sequence's pages by refcount bump, ``ensure_writable`` performs
+    copy-on-write before a shared page is written, and
+    ``retain_pages``/``release_pages`` hold pages alive for a prompt-prefix
+    index without any slot mapping them.
 
     ``lengths_host``/``page_table_host`` are host-side shadows of the device
     arrays, maintained by :class:`PagedLM` and ``allocate``/``release``; the
@@ -93,6 +116,7 @@ class PagedKVCache:
     page_table_host: Optional[np.ndarray] = None   # (B, n_pages) int32 shadow
     k_scale: Optional[jax.Array] = None  # (L, P, page, KVH) fp32, int8 mode
     v_scale: Optional[jax.Array] = None
+    refcounts: Optional[np.ndarray] = None  # (P,) owners per physical page
 
     #: kv_dtype name → pool dtype (None = the config's compute dtype).
     KV_DTYPES = {
@@ -132,6 +156,7 @@ class PagedKVCache:
             page_table_host=np.zeros((batch, n_pages_seq), np.int32),
             k_scale=jnp.ones(shape[:-1], jnp.float32) if quantized else None,
             v_scale=jnp.ones(shape[:-1], jnp.float32) if quantized else None,
+            refcounts=np.zeros((pool,), np.int64),
         )
 
     @property
@@ -178,6 +203,22 @@ class PagedKVCache:
             return np.array(self.page_table_host)
         return np.array(self.page_table)
 
+    def _drop_ref(self, refs: Optional[np.ndarray], free: List[int],
+                  page: int) -> None:
+        """Drop one owner of ``page``; free it when no owners remain.
+
+        With no refcount array (legacy caches built before sharing) every
+        page has exactly one owner and the drop is an immediate free.
+        """
+        if refs is None:
+            free.append(page)
+            return
+        refs[page] -= 1
+        if refs[page] < 0:
+            raise AssertionError(f"page {page} refcount went negative")
+        if refs[page] == 0:
+            free.append(page)
+
     def allocate(self, seq: int, n_pages: int) -> "PagedKVCache":
         """Map ``n_pages`` new physical pages after the slot's current ones."""
         if n_pages > len(self.free):
@@ -192,6 +233,10 @@ class PagedKVCache:
             )
         free = list(self.free)
         ids = [free.pop() for _ in range(n_pages)]
+        refs = None if self.refcounts is None else self.refcounts.copy()
+        if refs is not None:
+            for p in ids:
+                refs[p] = 1
         pt = self._host_table()
         pt[seq, start:start + n_pages] = ids
         mapped = None if self.mapped is None else self.mapped.copy()
@@ -199,37 +244,48 @@ class PagedKVCache:
             mapped[seq] = start + n_pages
         return dataclasses.replace(
             self, page_table=jnp.asarray(pt), page_table_host=pt,
-            free=free, mapped=mapped,
+            free=free, mapped=mapped, refcounts=refs,
         )
 
     def trim(self, seq: int, keep_pages: int) -> "PagedKVCache":
-        """Unmap a slot's pages beyond ``keep_pages`` back to the free pool.
+        """Unmap a slot's pages beyond ``keep_pages``.
 
         Only meaningful for pages past the written content (lookahead
-        over-provisioning): trimmed pages hold no live KV, so remapping them
-        later on demand is loss-free.
+        over-provisioning): trimmed pages hold no live KV *for this slot*,
+        so remapping them later on demand is loss-free.  A trimmed page
+        still referenced elsewhere (a prefix sibling or the prefix index)
+        is only un-mapped here — it returns to the free pool when its last
+        owner drops it.
         """
         used = self._mapped(seq)
         if keep_pages >= used:
             return self
         pt = self._host_table()
         free = list(self.free)
-        free.extend(int(p) for p in pt[seq, keep_pages:used])
+        refs = None if self.refcounts is None else self.refcounts.copy()
+        for p in pt[seq, keep_pages:used]:
+            self._drop_ref(refs, free, int(p))
         pt[seq, keep_pages:used] = 0
         mapped = None if self.mapped is None else self.mapped.copy()
         if mapped is not None:
             mapped[seq] = keep_pages
         return dataclasses.replace(
             self, page_table=jnp.asarray(pt), page_table_host=pt,
-            free=free, mapped=mapped,
+            free=free, mapped=mapped, refcounts=refs,
         )
 
     def release(self, seq: int) -> "PagedKVCache":
-        """Return a slot's pages to the pool (sequence exit / eviction)."""
+        """Drop a slot's page mappings (sequence exit / eviction).
+
+        Each page loses this slot as an owner; pages with no remaining
+        owners return to the free pool.
+        """
         pt = self._host_table()
         used = self._mapped(seq)
         free = list(self.free)
-        free.extend(int(p) for p in pt[seq, :used])
+        refs = None if self.refcounts is None else self.refcounts.copy()
+        for p in pt[seq, :used]:
+            self._drop_ref(refs, free, int(p))
         pt[seq, :] = 0
         if self.lengths_host is not None:
             lengths = self.lengths_host.copy()
@@ -243,8 +299,123 @@ class PagedKVCache:
             self, page_table=jnp.asarray(pt), page_table_host=pt,
             lengths=jnp.asarray(lengths),
             lengths_host=lengths if self.lengths_host is not None else None,
-            free=free, mapped=mapped,
+            free=free, mapped=mapped, refcounts=refs,
         )
+
+    # -- prefix sharing ------------------------------------------------------
+
+    def share(self, seq: int, page_ids: List[int]) -> "PagedKVCache":
+        """Map already-populated physical pages into ``seq`` by refcount bump.
+
+        The pages' KV contents are untouched — the new sequence reads the
+        prefix another sequence prefilled.  Writes into a shared page must
+        go through :meth:`ensure_writable` first.
+        """
+        if not page_ids:
+            return self
+        if self.refcounts is None:
+            raise ValueError("share() requires a refcounted cache")
+        start = self._mapped(seq)
+        if start + len(page_ids) > self.pages_per_seq:
+            raise OutOfPages(
+                f"seq {seq}: {start}+{len(page_ids)} shared pages exceeds "
+                f"the {self.pages_per_seq}-page table row"
+            )
+        refs = self.refcounts.copy()
+        for p in page_ids:
+            if refs[p] <= 0:
+                raise AssertionError(f"cannot share unowned page {p}")
+            refs[p] += 1
+        pt = self._host_table()
+        pt[seq, start:start + len(page_ids)] = page_ids
+        mapped = None if self.mapped is None else self.mapped.copy()
+        if mapped is not None:
+            mapped[seq] = start + len(page_ids)
+        return dataclasses.replace(
+            self, page_table=jnp.asarray(pt), page_table_host=pt,
+            mapped=mapped, refcounts=refs,
+        )
+
+    def retain_pages(self, page_ids: List[int]) -> "PagedKVCache":
+        """Add one owner to each page (prefix-index retention)."""
+        if not page_ids:
+            return self
+        if self.refcounts is None:
+            raise ValueError("retain_pages() requires a refcounted cache")
+        refs = self.refcounts.copy()
+        for p in page_ids:
+            if refs[p] <= 0:
+                raise AssertionError(f"cannot retain unowned page {p}")
+            refs[p] += 1
+        return dataclasses.replace(self, refcounts=refs)
+
+    def release_pages(self, page_ids: List[int]) -> "PagedKVCache":
+        """Drop one owner from each page; zero-owner pages return to free."""
+        if not page_ids:
+            return self
+        if self.refcounts is None:
+            raise ValueError("release_pages() requires a refcounted cache")
+        refs = self.refcounts.copy()
+        free = list(self.free)
+        for p in page_ids:
+            self._drop_ref(refs, free, int(p))
+        return dataclasses.replace(self, refcounts=refs, free=free)
+
+    def ensure_writable(self, seq: int, lo_token: int,
+                        hi_token: int) -> Tuple["PagedKVCache", int]:
+        """Copy-on-write any shared page covering tokens [lo, hi] of ``seq``.
+
+        Pages in the token range with more than one owner are copied to
+        fresh physical pages (K/V pools and, in int8 mode, the scale pools
+        — the codes and scales move together, so replay never re-quantizes
+        differently) and the slot's table is re-pointed at the private
+        copy.  Returns ``(cache, n_copied)``.  Device pools are donated
+        into the copy dispatch, matching the model entry points.
+        """
+        if self.refcounts is None or lo_token > hi_token:
+            return self, 0
+        page = self.page_size
+        p_lo = lo_token // page
+        p_hi = min(hi_token // page, self._mapped(seq) - 1)
+        if p_hi < p_lo:
+            return self, 0
+        table = (self.page_table_host if self.page_table_host is not None
+                 else np.asarray(self.page_table))
+        shared = [
+            (pi, int(table[seq, pi]))
+            for pi in range(p_lo, p_hi + 1)
+            if self.refcounts[int(table[seq, pi])] > 1
+        ]
+        if not shared:
+            return self, 0
+        if len(shared) > len(self.free):
+            raise OutOfPages(
+                f"seq {seq}: copy-on-write needs {len(shared)} pages, "
+                f"{len(self.free)} free"
+            )
+        refs = self.refcounts.copy()
+        free = list(self.free)
+        pt = self._host_table()
+        kp, vp = self.k_pages, self.v_pages
+        ks, vs = self.k_scale, self.v_scale
+        with _donation_noop_ok():
+            for pi, src in shared:
+                dst = free.pop()
+                src_i = np.int32(src)
+                dst_i = np.int32(dst)
+                kp = _copy_pool_page(kp, src_i, dst_i)
+                vp = _copy_pool_page(vp, src_i, dst_i)
+                if ks is not None:
+                    ks = _copy_pool_page(ks, src_i, dst_i)
+                    vs = _copy_pool_page(vs, src_i, dst_i)
+                refs[src] -= 1
+                refs[dst] = 1
+                pt[seq, pi] = dst
+        return dataclasses.replace(
+            self, k_pages=kp, v_pages=vp, k_scale=ks, v_scale=vs,
+            page_table=jnp.asarray(pt), page_table_host=pt,
+            free=free, refcounts=refs,
+        ), len(shared)
 
 
 # ---------------------------------------------------------------------------

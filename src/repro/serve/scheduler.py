@@ -42,6 +42,23 @@ Scheduling policy (vLLM-shaped, deliberately simple and deterministic):
   recorded tokens because the model is deterministic and row-wise (the
   property the equivalence tests assert) — a future nondeterministic
   kernel would have to cap fusion during replay.
+* **Prefix sharing** (opt-in, ``prefix_sharing=True``) — a
+  :class:`PrefixIndex` maps page-aligned prompt chunks to the physical
+  pages that hold them.  Admission looks the new prompt up and maps every
+  matched page by refcount bump (``PagedKVCache.share``), prefilling only
+  the divergent tail; completed prefills register their full prompt pages,
+  and retired requests' pages are *retained* by the index (LRU) so later
+  requests on the same system prompt hit the pool without it being
+  resident.  Writes never land in a shared page: admission privatizes the
+  boundary page up front via copy-on-write (``ensure_writable``), and the
+  prefill/decode paths carry the same guard defensively.  Under pool
+  pressure retained pages are dropped LRU-first before any resident is
+  evicted; eviction/replay re-derives shared mappings through the same
+  lookup, so replay stays bit-for-bit (shared pages are reused, never
+  re-quantized differently in int8 mode).  Admission briefly *defers* a
+  request whose prefix is still being prefilled by a resident sibling, so
+  concurrent arrivals with one system prompt share it instead of each
+  prefilling privately.
 * **Hooks** — ``on_token(request, token)`` streams each newly generated
   token; ``on_finish(request)`` fires at completion.
 
@@ -58,8 +75,11 @@ from __future__ import annotations
 import dataclasses
 import enum
 import time
-from collections import deque
-from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+from collections import OrderedDict, deque
+from typing import (
+    Callable, Deque, Dict, FrozenSet, Iterator, List, Optional, Sequence,
+    Tuple,
+)
 
 import jax.numpy as jnp
 import numpy as np
@@ -68,15 +88,18 @@ from repro.core.packing import (
     Traffic,
     paged_decode_traffic,
     paged_prefill_traffic,
+    prefix_share_traffic,
 )
 from repro.core.streams import (
     IndirectStream,
     page_table_streams,
     prefill_table_streams,
+    share_table_streams,
 )
 from .engine import OutOfPages, PagedKVCache, PagedLM
 
 __all__ = [
+    "PrefixIndex",
     "Request",
     "RequestState",
     "Scheduler",
@@ -85,6 +108,103 @@ __all__ = [
     "build_prefill_rows",
     "static_batch_generate",
 ]
+
+
+class PrefixIndex:
+    """Prompt-prefix → physical-page index over page-aligned token chunks.
+
+    Entry ``k`` of a prompt is keyed by the byte string of its first
+    ``(k+1)·page`` tokens and maps to the physical page holding tokens
+    ``[k·page, (k+1)·page)``.  Keying each page by the *cumulative* chunk
+    (not just its own tokens) makes the mapping exact — two prompts share
+    entry ``k`` iff they agree on every token up to that page boundary — so
+    a lookup walk needs no verification pass and cannot alias.
+
+    The index holds one refcount owner per registered page
+    (``PagedKVCache.retain_pages``), which is what keeps a retired prompt's
+    prefix resident.  Entries are LRU-ordered; the scheduler drops them
+    oldest-first under pool pressure.
+    """
+
+    def __init__(self, page_size: int):
+        self.page = page_size
+        #: key → physical page id, in LRU order (oldest first).
+        self.entries: "OrderedDict[bytes, int]" = OrderedDict()
+
+    def chunks(self, prompt) -> Iterator[bytes]:
+        """Cumulative page-aligned chunk keys of ``prompt``, in order."""
+        pr = np.ascontiguousarray(np.asarray(prompt, dtype=np.int64))
+        for k in range(len(pr) // self.page):
+            yield pr[: (k + 1) * self.page].tobytes()
+
+    def prefix_keys(self, prompt, n: int) -> FrozenSet[bytes]:
+        """The first ``n`` chunk keys of ``prompt`` (a lookup's match set)."""
+        out = []
+        for k, key in enumerate(self.chunks(prompt)):
+            if k >= n:
+                break
+            out.append(key)
+        return frozenset(out)
+
+    def match_len(self, prompt) -> int:
+        """Longest indexed prefix of ``prompt``, in pages (LRU untouched)."""
+        n = 0
+        for key in self.chunks(prompt):
+            if key not in self.entries:
+                break
+            n += 1
+        return n
+
+    def lookup(self, prompt) -> List[int]:
+        """Physical pages of the longest indexed prefix; refreshes LRU."""
+        ids: List[int] = []
+        for key in self.chunks(prompt):
+            page_id = self.entries.get(key)
+            if page_id is None:
+                break
+            self.entries.move_to_end(key)
+            ids.append(page_id)
+        return ids
+
+    def register(self, prompt, page_ids: Sequence[int]) -> List[int]:
+        """Index ``prompt``'s full pages; returns the newly retained ones.
+
+        Existing entries win (first prefill of a prefix is the canonical
+        copy) — the caller must bump refcounts for exactly the returned
+        pages.
+        """
+        new: List[int] = []
+        for k, key in enumerate(self.chunks(prompt)):
+            if k >= len(page_ids):
+                break
+            if key in self.entries:
+                self.entries.move_to_end(key)
+                continue
+            self.entries[key] = int(page_ids[k])
+            new.append(int(page_ids[k]))
+        return new
+
+    def pop_chain(self, key: bytes,
+                  keep: FrozenSet[bytes] = frozenset()) -> List[int]:
+        """Drop ``key`` and every entry extending it; returns their pages.
+
+        Dropping the extensions keeps every remaining entry reachable from
+        a fresh lookup walk (an entry whose ancestor is gone could never be
+        matched again and would leak its retention).  ``keep`` protects a
+        chain a pending admission has just matched.
+        """
+        pages: List[int] = []
+        for k2 in [k for k in self.entries if k.startswith(key)]:
+            if k2 in keep:
+                continue
+            pages.append(self.entries.pop(k2))
+        return pages
+
+    def pop_all(self) -> List[int]:
+        """Drop every entry; returns all retained pages."""
+        pages = list(self.entries.values())
+        self.entries.clear()
+        return pages
 
 
 def build_prefill_rows(
@@ -161,7 +281,7 @@ class StepRecord:
     """Per-model-step accounting (a fused launch emits one record per step)."""
 
     step: int
-    kind: str                 # 'decode' | 'prefill'
+    kind: str                 # 'decode' | 'prefill' | 'share'
     n_active: int
     new_tokens: int
     traffic: Optional[Traffic]
@@ -173,6 +293,8 @@ class ServeStats:
     records: List[StepRecord] = dataclasses.field(default_factory=list)
     n_evictions: int = 0
     wall_s: float = 0.0
+    prefill_tokens_saved: int = 0   # prompt tokens mapped instead of prefilled
+    cow_copies: int = 0             # copy-on-write page copies performed
 
     @property
     def decode_steps(self) -> int:
@@ -242,11 +364,52 @@ class ServeStats:
         p = self.prefill_pack_bytes
         return self.prefill_useful_bytes / p if p else 1.0
 
+    # -- prefix-sharing aggregates (kind='share' records) --------------------
+
+    @property
+    def shared_pages(self) -> int:
+        """Physical pages mapped by refcount bump instead of prefilled."""
+        return sum(
+            r.traffic.shared_pages
+            for r in self.records
+            if r.traffic is not None
+        )
+
+    @property
+    def share_events(self) -> int:
+        return sum(1 for r in self.records if r.kind == "share")
+
+    @property
+    def shared_useful_bytes(self) -> int:
+        return self._sum("useful_bytes", "share")
+
+    @property
+    def shared_index_bytes(self) -> int:
+        return self._sum("index_bus_bytes_pack", "share")
+
+    @property
+    def prefill_effective_pack_efficiency(self) -> float:
+        """Prefill-side PACK efficiency with dedup folded in.
+
+        Bytes of prompt KV the pool ends up serving (prefilled + shared)
+        over the bytes PACK actually moved to get there (prefill payload
+        and table fetches, plus the share remaps' table fetches).  Exceeds
+        :attr:`prefill_pack_efficiency` exactly when prefix sharing elided
+        prefill work — the dedup-before-packing multiplier; unlike a plain
+        packing ratio it can exceed 1.
+        """
+        moved = (self.prefill_pack_bytes
+                 + self._sum("pack_bytes", "share")
+                 + self.shared_index_bytes)
+        served = self.prefill_useful_bytes + self.shared_useful_bytes
+        return served / moved if moved else 1.0
+
 
 class Scheduler:
     """Continuous-batching scheduler driving a :class:`PagedLM`."""
 
-    def __init__(self, model: PagedLM, cache: PagedKVCache, chunk: int = 8):
+    def __init__(self, model: PagedLM, cache: PagedKVCache, chunk: int = 8,
+                 prefix_sharing: bool = False):
         # Element width drives the traffic accounting AND the math the model
         # runs, so any model/cache width mismatch (not just int8-vs-float)
         # must fail loudly rather than mis-report PACK bytes.
@@ -256,9 +419,14 @@ class Scheduler:
                 f"match the cache pool dtype ({cache.k_pages.dtype.name}): "
                 "create both with the same kv_dtype"
             )
+        if prefix_sharing and cache.refcounts is None:
+            raise ValueError("prefix_sharing requires a refcounted cache")
         self.model = model
         self.cache = cache
         self.chunk = chunk
+        self.prefix_index: Optional[PrefixIndex] = (
+            PrefixIndex(cache.page_size) if prefix_sharing else None
+        )
         self.queue: Deque[Request] = deque()
         self.resident: List[Request] = []      # admission order
         self.finished: Dict[int, Request] = {}
@@ -343,28 +511,130 @@ class Scheduler:
                 )
             self.cache = self.cache.trim(r.slot, floor)
 
+    def _drop_retained(self, need: int,
+                       keep: FrozenSet[bytes] = frozenset()) -> None:
+        """Release retained prefix entries (LRU-first) until ``need`` free.
+
+        An entry whose page is still shared with a resident frees nothing
+        when dropped, so it is skipped; ``keep`` protects the chain a
+        pending admission has just matched.  Dropping an entry drops its
+        whole extension chain (see :meth:`PrefixIndex.pop_chain`).
+        """
+        if self.prefix_index is None:
+            return
+        for key in list(self.prefix_index.entries):
+            if self.cache.n_free >= need:
+                return
+            if key not in self.prefix_index.entries or key in keep:
+                continue  # already popped as part of an earlier chain
+            page_id = self.prefix_index.entries[key]
+            if self.cache.refcounts[page_id] > 1:
+                continue
+            pages = self.prefix_index.pop_chain(key, keep=keep)
+            self.cache = self.cache.release_pages(pages)
+
+    def flush_prefix_cache(self) -> None:
+        """Drop every retained prefix entry; unshared pages return to free."""
+        if self.prefix_index is None:
+            return
+        self.cache = self.cache.release_pages(self.prefix_index.pop_all())
+
+    def _defer_for_inflight_prefix(self, r: Request) -> bool:
+        """Hold admission while a still-prefilling resident is building a
+        longer shared prefix for ``r`` than the index already offers.
+
+        Registration happens at prefill completion, so concurrent arrivals
+        with a common system prompt would otherwise each prefill it
+        privately; waiting one scheduling boundary converts the later ones
+        into refcount bumps.  Terminates because prefill advances every
+        pending resident each step: the sibling either completes (and
+        registers at least the pages counted here) or is evicted (and the
+        defer condition vanishes).
+        """
+        assert self.prefix_index is not None
+        page = self.cache.page_size
+        pr = np.asarray(r.prompt, dtype=np.int64)
+        have = self.prefix_index.match_len(r.prompt)
+        for s in self.resident:
+            if s.state is not RequestState.PREFILL:
+                continue
+            ps = np.asarray(s.prompt, dtype=np.int64)
+            limit = min(len(pr), (s.prompt_len // page) * page) // page
+            n = 0
+            while (n < limit and np.array_equal(
+                    pr[n * page:(n + 1) * page], ps[n * page:(n + 1) * page])):
+                n += 1
+            if n > have:
+                return True
+        return False
+
     def _admit(self) -> None:
         while self.queue and self._free_slots:
             r = self.queue[0]
+            shared: List[int] = []
+            if self.prefix_index is not None:
+                if self._defer_for_inflight_prefix(r):
+                    return
+                shared = self.prefix_index.lookup(r.prompt)
+            page = self.cache.page_size
+            shared_tokens = len(shared) * page
+            # Admission always (re-)prefills at least the prompt's last
+            # token, so completing prefill yields fresh last-token logits.
+            # A fully page-aligned match therefore writes one token into
+            # its final *shared* page — privatized eagerly below via
+            # copy-on-write, with the extra page counted in ``need`` so two
+            # same-step admissions can't both claim the same free page.
+            tail_start = min(shared_tokens, r.prompt_len - 1)
+            cow_extra = 1 if shared_tokens > tail_start else 0
             # Pages for the whole prompt, plus one decode page of headroom
             # when the first appended token will cross a page boundary.
-            need = self.cache.pages_for(
+            need = (self.cache.pages_for(
                 min(r.prompt_len + 1, self._max_kv(r))
-            )
+            ) - len(shared) + cow_extra)
             if self.cache.n_free < need:
                 self._reclaim_lookahead(need)
+            if self.cache.n_free < need and self.prefix_index is not None:
+                self._drop_retained(
+                    need,
+                    keep=self.prefix_index.prefix_keys(r.prompt, len(shared)),
+                )
             if self.cache.n_free < need:
                 return
             self.queue.popleft()
             r.slot = self._free_slots.pop()
             r.state = RequestState.PREFILL
-            r.prefill_pos = 0
+            r.prefill_pos = tail_start
             r.fed = 0
             r.admit_order = self._admit_counter
             self._admit_counter += 1
-            self.cache = self.cache.allocate(
-                r.slot, self.cache.pages_for(r.prompt_len)
-            )
+            self.cache = self.cache.share(r.slot, shared)
+            fresh = self.cache.pages_for(r.prompt_len) - len(shared)
+            if fresh > 0:
+                self.cache = self.cache.allocate(r.slot, fresh)
+            if cow_extra:
+                self.cache, n_cow = self.cache.ensure_writable(
+                    r.slot, tail_start, tail_start
+                )
+                self.stats.cow_copies += n_cow
+            if shared:
+                # Replay after eviction walks this same path: the lookup
+                # re-derives the mappings, so re-admission reuses the pages
+                # (bit-identical KV, int8 scales included) it had before.
+                self.stats.prefill_tokens_saved += tail_start
+                self.stats.records.append(StepRecord(
+                    step=self._step, kind="share", n_active=1, new_tokens=0,
+                    traffic=prefix_share_traffic(
+                        tail_start, len(shared), page,
+                        self.model.kv_token_bytes,
+                        elem_bits=self.model.kv_elem_bits,
+                        scale_bytes_per_token=self.model.kv_scale_token_bytes,
+                    ),
+                    streams=share_table_streams(
+                        shared, page, self.model.kv_token_bytes,
+                        kv_elem_bits=self.model.kv_elem_bits,
+                        scale_bytes_per_token=self.model.kv_scale_token_bytes,
+                    ),
+                ))
             self.resident.append(r)
 
     # -- prefill ------------------------------------------------------------
@@ -380,6 +650,16 @@ class Scheduler:
             [(r.prompt, r.prefill_pos, r.slot) for r in pending],
             self.chunk, b,
         )
+        if self.prefix_index is not None:
+            # Defensive: admission privatizes the only shared page a prefill
+            # can write (the page-aligned-match boundary), so this is a
+            # refcount scan that never copies — unless an invariant broke,
+            # in which case copy-on-write still keeps siblings isolated.
+            for i, r in enumerate(pending):
+                self.cache, n_cow = self.cache.ensure_writable(
+                    r.slot, int(starts[i]), int(starts[i] + counts[i]) - 1
+                )
+                self.stats.cow_copies += n_cow
         logits, self.cache = self.model.prefill_batch(
             toks, counts, slots, starts, self.cache
         )
@@ -392,6 +672,18 @@ class Scheduler:
                 r.fed = 0
                 if not r.generated:  # fresh prefill; a replay already has it
                     completed.append((i, r))
+                if self.prefix_index is not None:
+                    # Register the full prompt pages (the partial last page,
+                    # which decode will keep writing, is never indexed) and
+                    # give the index its refcount owner on the new entries.
+                    t = self.cache.page_table_host
+                    row = (t[r.slot] if t is not None
+                           else np.asarray(self.cache.page_table)[r.slot])
+                    n_full = r.prompt_len // self.cache.page_size
+                    new_pages = self.prefix_index.register(
+                        r.prompt, [int(p) for p in row[:n_full]]
+                    )
+                    self.cache = self.cache.retain_pages(new_pages)
         if completed:
             lg = np.asarray(logits)  # host sync: admission boundary only
             for i, r in completed:
@@ -466,13 +758,23 @@ class Scheduler:
             tokens[r.slot] = r.generated[r.fed]
             active[r.slot] = True
         lens0 = self._lengths().copy()
-        table = (np.array(self.cache.page_table_host)
-                 if self.cache.page_table_host is not None
-                 else np.asarray(self.cache.page_table))
 
         # Fuse up to the boundary: device-resident scan chunks, one token
         # sync at the end (the scheduling boundary).
         n = self._fused_steps(running)
+        if self.prefix_index is not None:
+            # Defensive: decode appends land past the prompt, and shared
+            # pages only ever cover full prompt pages, so this scan never
+            # copies unless an invariant broke (see _prefill_all).
+            for r in running:
+                ln = int(lens0[r.slot])
+                self.cache, n_cow = self.cache.ensure_writable(
+                    r.slot, ln, ln + n - 1
+                )
+                self.stats.cow_copies += n_cow
+        table = (np.array(self.cache.page_table_host)
+                 if self.cache.page_table_host is not None
+                 else np.asarray(self.cache.page_table))
         out, self.cache = self.model.decode_upto(
             tokens, self.cache, active, n
         )
@@ -524,8 +826,21 @@ class Scheduler:
                 continue  # headroom left in the last mapped page
             while (r.state is RequestState.RUNNING
                    and self.cache.n_free < 1):
+                # Retained-but-unshared prefix pages are the cheapest relief
+                # (no resident loses work); then evict the youngest.  Each
+                # iteration frees a page, removes a resident, or empties the
+                # index, so the loop terminates.
+                self._drop_retained(1)
+                if self.cache.n_free >= 1:
+                    break
                 victim = max(self.resident, key=lambda x: x.admit_order)
                 if victim is r and len(self.resident) == 1:
+                    if (self.prefix_index is not None
+                            and self.prefix_index.entries):
+                        # Last resort: drop retention even for pages this
+                        # request shares — it keeps its own mappings.
+                        self.flush_prefix_cache()
+                        continue
                     # Unreachable given the submit() worst-case guard.
                     raise OutOfPages(
                         "page pool exhausted with a single resident request"

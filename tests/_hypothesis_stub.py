@@ -81,6 +81,17 @@ strategies = types.SimpleNamespace(
 )
 
 
+class HealthCheck:
+    """Name-compatible stand-ins for the real package's HealthCheck enum
+    (the stub runs no health checks, so ``suppress_health_check`` lists are
+    accepted and ignored)."""
+
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+    function_scoped_fixture = "function_scoped_fixture"
+
+
 def settings(max_examples: int | None = None, deadline=None, **_kw):
     """Record ``max_examples``; the stub caps it at REPRO_STUB_MAX_EXAMPLES."""
 

@@ -1,12 +1,13 @@
-"""Paged prefill attention kernel vs the dense-einsum oracle.
+"""Paged prefill attention kernel vs the dense-einsum oracle — specials.
 
 The kernel streams each row's context pages through the scalar-prefetch
 indirect path with an online softmax (interpret mode on this CPU host —
 identical kernel code compiles on TPU); the oracle gathers the bounded
-context densely and runs masked softmax with GQA repeats.  Sweeps cover
-ragged per-row context, GQA group sizes, chunks straddling page boundaries,
-exact page-multiple boundaries, padding rows, and the no-DMA clamp for
-unmapped tail pages.
+context densely and runs masked softmax with GQA repeats.  The
+GQA × dtype × length cross-product lives in test_oracle_sweep.py; this
+module keeps the specials that don't fit a sweep — padding-row NaN
+guards, page-boundary straddles, the no-DMA clamp for unmapped tail pages
+(fp32 and int8 scale pages), and bf16 accumulation.
 """
 import jax
 import jax.numpy as jnp
@@ -39,19 +40,6 @@ def _both(q, kp, vp, rows, starts, counts):
         q, kp, vp, rows, starts, counts, impl="pallas"
     )
     return np.asarray(got), np.asarray(want)
-
-
-@pytest.mark.parametrize("h,kvh", [(4, 4), (8, 2), (6, 1)])
-def test_matches_ref_gqa(h, kvh):
-    """GQA group sizes 1/4/6 (incl. MHA): kernel groups queries per KV head
-    instead of repeating K/V."""
-    rng = np.random.default_rng(0)
-    q, kp, vp, rows = _case(rng, r=3, c=8, h=h, kvh=kvh, d=32,
-                            pool=16, page=4, ctx=4)
-    starts = jnp.asarray([0, 6, 3], jnp.int32)    # ragged, mid-page starts
-    counts = jnp.asarray([8, 8, 5], jnp.int32)
-    got, want = _both(q, kp, vp, rows, starts, counts)
-    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
 
 
 def test_matches_ref_ragged_ctx_and_padding_rows():
@@ -124,34 +112,6 @@ def test_unmapped_tail_pages_issue_no_dmas():
         np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5
     )
     assert np.isfinite(np.asarray(got)).all()
-
-
-@pytest.mark.parametrize("h,kvh", [(4, 4), (8, 2)])
-def test_int8_pool_matches_dequantized_ref(h, kvh):
-    """Int8 pool + per-(page-token, kv-head) scale pools: the kernel's
-    in-VMEM dequant must match the oracle running on the fully dequantized
-    pool (the shared ``dequantize_pages`` broadcast rule) — exercising the
-    scale pages through the same clamped index map as the K/V pages."""
-    from repro.kernels import ref
-
-    rng = np.random.default_rng(6)
-    q, kp, vp, rows = _case(rng, r=3, c=8, h=h, kvh=kvh, d=32,
-                            pool=16, page=4, ctx=4)
-    kq, ks = ref.quantize_kv(kp)
-    vq, vs = ref.quantize_kv(vp)
-    starts = jnp.asarray([0, 6, 3], jnp.int32)
-    counts = jnp.asarray([8, 8, 0], jnp.int32)    # incl. a padding row
-    got = ops.paged_prefill_attention(
-        q, kq, vq, rows, starts, counts, k_scale=ks, v_scale=vs,
-        impl="pallas",
-    )
-    want = ops.paged_prefill_attention(
-        q, ref.dequantize_pages(kq, ks), ref.dequantize_pages(vq, vs),
-        rows, starts, counts, impl="ref",
-    )
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=1e-5, atol=1e-5)
-    assert np.abs(np.asarray(got)[2]).max() == 0.0
 
 
 def test_int8_unmapped_tail_pages_issue_no_dmas():
