@@ -159,6 +159,27 @@ def main() -> None:
               f"plain_pack_eff={row['plain_pack_eff']:.1%},"
               f"outputs_match={row['outputs_match']}")
 
+    # ---- Serving, degradation: throughput under pool pressure + chaos ---
+    # Mixed-SLA workload vs shrinking pools and a seeded fault plan: the
+    # robustness counters (evictions / preemptions / rejections / deadline
+    # misses) next to tokens/s, with liveness (all_terminal) and replay
+    # correctness (outputs_match) asserted per row.
+    from .serving import degradation_rows
+    print("\n# Serving degradation: tokens/s + SLA counters under pool "
+          "pressure and injected faults")
+    drows = degradation_rows(quick=args.quick)
+    for row in drows:
+        print(f"serving_degradation,{row['label']},"
+              f"pool_pages={row['pool_pages']},"
+              f"tokens_s={row['tokens_per_s']:.0f},"
+              f"completed={row['completed']},"
+              f"evictions={row['evictions']},"
+              f"preemptions={row['preemptions']},"
+              f"rejections={row['rejections']},"
+              f"deadline_misses={row['deadline_misses']},"
+              f"all_terminal={row['all_terminal']},"
+              f"outputs_match={row['outputs_match']}")
+
     if args.json:
         def _json_row(r):
             return {
@@ -198,6 +219,7 @@ def main() -> None:
                 ) for r in irows],
             },
             "serving_shared_prefix": {"rows": prows},
+            "serving_degradation": {"rows": drows},
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

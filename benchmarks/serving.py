@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.configs import smoke_config
 from repro.serve import (
+    FaultPlan,
     PagedKVCache,
     PagedLM,
     Request,
@@ -186,6 +187,103 @@ def shared_prefix_rows(
             "wall_s_plain": wall[False],
             "tokens_per_s": st.tokens / wall[True],
             "outputs_match": True,
+        })
+    return rows
+
+
+def degradation_rows(
+    n_reqs: int = 6,
+    n_new: int = 8,
+    quick: bool = False,
+    fractions: Sequence[float] = (1.0, 0.5, 0.25, 0.12),
+) -> List[Dict]:
+    """Throughput under pool pressure: the robustness/degradation sweep.
+
+    A fixed mixed-SLA workload (alternating priorities, deadlines on the
+    interactive half, replay budgets on every third request) runs against
+    pools shrunk to a fraction of the roomy full-pool footprint, plus one
+    row with a seeded :class:`repro.serve.FaultPlan` injecting forced
+    exhaustion / denied allocations on top of a halved pool.  Every row
+    records the degradation counters (`evictions`, `preemptions`,
+    `rejections`, `deadline_misses`) next to tokens/s, and asserts the
+    liveness + correctness contract: **all requests terminal** (no
+    deadlock, no crash) and **finished outputs bit-for-bit equal** to the
+    full-pool fault-free reference.  CI fails the BENCH artifact if either
+    flag is False.
+    """
+    if quick:
+        fractions = (1.0, 0.5, 0.12)
+    cfg = smoke_config("yi-6b")
+    model = PagedLM(cfg, jax.random.PRNGKey(0), impl="ref")
+    rng = np.random.default_rng(3)
+    lens = rng.integers(4, 25, n_reqs)
+    prompts = [rng.integers(0, cfg.vocab, int(n)).astype(np.int32)
+               for n in lens]
+    # Roomy footprint: every request fully grown at once.
+    full = sum(-(-(len(p) + n_new - 1) // PAGE) for p in prompts)
+    batch = min(n_reqs, 3)  # fewer slots than requests: real queueing
+
+    def make_requests():
+        return [
+            Request(
+                rid=i, prompt=p.copy(), max_new=n_new,
+                priority=i % 2,
+                deadline_steps=40 if i % 2 else None,
+                replay_budget=(2 * (len(p) + n_new) if i % 3 == 0 else None),
+            )
+            for i, p in enumerate(prompts)
+        ]
+
+    def run(pool: int, faults) -> Scheduler:
+        cache = PagedKVCache.create(
+            cfg, batch=batch, max_len=MAX_LEN, page=PAGE, pool_pages=pool,
+        )
+        sched = Scheduler(model, cache, chunk=CHUNK, faults=faults)
+        reqs = make_requests()
+        for r in reqs:
+            sched.submit(r, strict=False)
+        sched.run(max_steps=2000)
+        return sched
+
+    run(full, None)  # warmup: compile every jit entry on the same workload
+    reference = {
+        rid: r.generated for rid, r in run(full, None).finished.items()
+    }
+
+    cases = [(f"pool×{f:g}", f, None) for f in fractions]
+    cases.append(
+        ("chaos pool×0.5", 0.5,
+         FaultPlan.random(0, n_steps=24, p_exhaust=0.3, p_deny=0.2))
+    )
+    rows = []
+    for label, frac, faults in cases:
+        pool = max(2, int(round(full * frac)))
+        t0 = time.perf_counter()
+        sched = run(pool, faults)
+        wall = time.perf_counter() - t0
+        st = sched.stats
+        terminal = (len(sched.finished) + len(sched.preempted)
+                    + len(sched.rejected))
+        rows.append({
+            "label": label,
+            "pool_frac": frac,
+            "pool_pages": pool,
+            "batch": batch,
+            "chaos": faults is not None,
+            "tokens": st.tokens,
+            "wall_s": wall,
+            "tokens_per_s": st.tokens / wall,
+            "completed": len(sched.finished),
+            "evictions": st.n_evictions,
+            "preemptions": st.n_preempted,
+            "rejections": st.n_rejected,
+            "reject_reasons": dict(st.reject_reasons),
+            "deadline_misses": st.deadline_misses,
+            "all_terminal": terminal == n_reqs,
+            "outputs_match": all(
+                r.generated == reference[rid]
+                for rid, r in sched.finished.items()
+            ),
         })
     return rows
 

@@ -48,8 +48,17 @@ class StragglerWatchdog:
         self.ema: Optional[float] = None
         self.stragglers = 0
         self.on_straggler = on_straggler
+        self.history: list = []  # observed dt per step (injected included)
 
-    def observe(self, dt: float) -> bool:
+    def observe(self, dt: float, injected: float = 0.0) -> bool:
+        """Record one step's wall time; True when it counts as a straggler.
+
+        ``injected`` adds synthetic latency (fault injection) to the observed
+        time without anyone actually sleeping — the serving chaos harness
+        uses it to make slow-host detection testable deterministically.
+        """
+        dt = dt + injected
+        self.history.append(dt)
         is_straggler = False
         if self.ema is not None and dt > self.cfg.straggler_factor * self.ema:
             self.stragglers += 1

@@ -1,10 +1,21 @@
-"""Serving: prefill/decode engine, paged KV pool, continuous batching."""
+"""Serving: prefill/decode engine, paged KV pool, continuous batching,
+SLA-aware admission/preemption, and the chaos/fault-injection layer."""
 from .engine import OutOfPages, PagedKVCache, PagedLM, ServeEngine
+from .faults import (
+    FaultPlan,
+    InvariantViolation,
+    check_scheduler_invariants,
+    terminal_states,
+)
 from .scheduler import (
+    TERMINAL_STATES,
     PrefixIndex,
+    RejectReason,
     Request,
+    RequestRejected,
     RequestState,
     Scheduler,
+    SchedulerStalledError,
     ServeStats,
     StepRecord,
     build_prefill_rows,

@@ -361,6 +361,64 @@ class PagedKVCache:
             self._drop_ref(refs, free, int(p))
         return dataclasses.replace(self, refcounts=refs, free=free)
 
+    def check_integrity(self, retained: int = 0) -> None:
+        """Assert the pool's host-side bookkeeping is self-consistent.
+
+        ``retained`` is the number of out-of-table owners (prefix-index
+        retentions) the refcount conservation law must account for.  Checks
+        — all host-side, no device sync:
+
+        * the free list holds no duplicates and only valid page ids;
+        * no page is simultaneously free and owned, and free + owned
+          partition the pool (refcounted caches);
+        * conservation: ``refcounts.sum() == mapped.sum() + retained``;
+        * every mapped page-table entry points at an owned page, and
+          entries beyond ``mapped`` are zeroed (no orphaned host shadows);
+        * ``lengths_host`` never exceeds the mapped capacity of its slot.
+
+        Raises ``AssertionError`` on the first violation; the chaos suite
+        (``repro.serve.faults``) calls this after every scheduler step.
+        """
+        free = list(self.free)
+        assert len(free) == len(set(free)), "duplicate pages in free list"
+        assert all(0 <= p < self.total_pages for p in free), \
+            f"free list holds out-of-range page: {free}"
+        refs = self.refcounts
+        table = self.page_table_host
+        if refs is not None:
+            assert (refs >= 0).all(), "negative refcount"
+            owned = {p for p in range(self.total_pages) if refs[p] > 0}
+            overlap = owned & set(free)
+            assert not overlap, f"pages both free and owned: {sorted(overlap)}"
+            assert len(owned) + len(free) == self.total_pages, (
+                f"free ({len(free)}) + owned ({len(owned)}) pages do not "
+                f"partition the {self.total_pages}-page pool"
+            )
+            if self.mapped is not None:
+                assert int(refs.sum()) == int(self.mapped.sum()) + retained, (
+                    f"refcount conservation broken: refs {int(refs.sum())} "
+                    f"!= mapped {int(self.mapped.sum())} + retained {retained}"
+                )
+        if table is not None and self.mapped is not None:
+            for seq in range(table.shape[0]):
+                used = int(self.mapped[seq])
+                for p in table[seq, :used]:
+                    assert int(p) not in set(free), \
+                        f"seq {seq} maps free page {int(p)}"
+                    if refs is not None:
+                        assert refs[int(p)] >= 1, \
+                            f"seq {seq} maps unowned page {int(p)}"
+                assert not table[seq, used:].any(), (
+                    f"seq {seq}: orphaned table entries beyond its "
+                    f"{used} mapped pages"
+                )
+                if self.lengths_host is not None:
+                    ln = int(self.lengths_host[seq])
+                    assert ln <= used * self.page_size, (
+                        f"seq {seq}: length shadow {ln} exceeds "
+                        f"{used} mapped pages"
+                    )
+
     def ensure_writable(self, seq: int, lo_token: int,
                         hi_token: int) -> Tuple["PagedKVCache", int]:
         """Copy-on-write any shared page covering tokens [lo, hi] of ``seq``.

@@ -10,9 +10,35 @@ traffic accounting — are derived from the same
 
 Scheduling policy (vLLM-shaped, deliberately simple and deterministic):
 
-* **Admission** — FIFO.  A waiting request is admitted when a batch slot is
-  free and the pool holds pages for its whole prompt plus one decode page of
-  headroom.  Prompt pages are allocated at admission; decode pages on demand.
+* **Admission** — priority/deadline ordered.  The queue sorts by
+  ``(priority desc, absolute deadline asc, submission order)``; with the
+  defaults (priority 0, no deadline) this is exactly FIFO.  The head of the
+  queue is admitted when a batch slot is free and the pool holds pages for
+  its whole prompt plus one decode page of headroom (head-of-line blocking
+  is deliberate: it keeps admission deterministic and starvation-free).
+  Prompt pages are allocated at admission; decode pages on demand.
+  Requests that can *never* be served — worst-case pages exceed the pool,
+  or the prompt+generation exceeds the per-sequence table row — are
+  rejected at ``submit()`` with a typed, non-fatal :class:`RequestRejected`
+  (reason ``NEVER_FITS``); a ``deadline_steps`` too tight to ever meet is
+  rejected as ``DEADLINE_INFEASIBLE``; and a queued request whose deadline
+  expires while the pool is busy is rejected as ``POOL_BUSY`` instead of
+  being served late.  Rejection is a terminal state (``rejected``) tracked
+  next to ``finished`` — it never poisons the scheduler.
+* **Preemption** — when page growth or admission hits pool exhaustion the
+  scheduler evicts the resident with the *lowest priority*, tie-broken by
+  the cheapest replay cost (prompt + generated tokens — exactly the work
+  replay must redo), then by youth.  Each eviction charges the victim's
+  ``replay_budget`` (tokens; ``None`` = unlimited); a victim whose budget
+  is exhausted transitions to the terminal ``preempted`` state (partial
+  output retained in ``generated``) instead of re-entering the queue.
+* **Fault injection** — an optional :class:`repro.serve.faults.FaultPlan`
+  drives chaos testing: forced pool exhaustion (admission/growth see zero
+  free pages), denied allocations (growth defers the starved request a
+  step), prefix-index drops, and injected step latency fed to an optional
+  ``StragglerWatchdog``.  Faults reroute through the same degradation
+  ladder as real pressure — reclaim lookahead → drop retained prefixes →
+  evict/preempt — and never raise out of ``run()``.
 * **Prefill** — chunked and batched: each scheduler step advances *every*
   pending request by one fixed-size chunk in a single
   ``PagedLM.prefill_batch`` call, interleaved with decode (prefill never
@@ -75,9 +101,9 @@ from __future__ import annotations
 import dataclasses
 import enum
 import time
-from collections import OrderedDict, deque
+from collections import OrderedDict
 from typing import (
-    Callable, Deque, Dict, FrozenSet, Iterator, List, Optional, Sequence,
+    Any, Callable, Dict, FrozenSet, Iterator, List, Optional, Sequence,
     Tuple,
 )
 
@@ -97,17 +123,67 @@ from repro.core.streams import (
     share_table_streams,
 )
 from .engine import OutOfPages, PagedKVCache, PagedLM
+from .faults import FaultPlan
 
 __all__ = [
     "PrefixIndex",
+    "RejectReason",
     "Request",
+    "RequestRejected",
     "RequestState",
     "Scheduler",
+    "SchedulerStalledError",
     "StepRecord",
     "ServeStats",
     "build_prefill_rows",
     "static_batch_generate",
 ]
+
+
+class RejectReason(enum.Enum):
+    """Why a request was rejected instead of served.
+
+    * ``NEVER_FITS`` — the request's worst-case page demand exceeds the
+      pool, or its prompt+generation exceeds the per-sequence table row; no
+      amount of waiting can serve it.
+    * ``POOL_BUSY`` — the request has a deadline, and by the time the busy
+      pool could admit it the deadline can no longer be met.  With no
+      deadline a request waits indefinitely instead.
+    * ``DEADLINE_INFEASIBLE`` — the deadline is shorter than the minimum
+      scheduler steps the request needs even on an idle pool.
+    """
+
+    NEVER_FITS = "never-fits"
+    POOL_BUSY = "pool-busy"
+    DEADLINE_INFEASIBLE = "deadline-infeasible"
+
+
+class RequestRejected(RuntimeError):
+    """Typed, non-fatal rejection: the scheduler stays fully consistent.
+
+    Raised from ``submit(..., strict=True)`` (the default) so misuse is
+    loud; with ``strict=False`` the rejection is recorded silently in
+    ``Scheduler.rejected`` and submit returns ``False``.  Either way the
+    request ends in the terminal ``REJECTED`` state with
+    ``request.reject_reason`` set.
+    """
+
+    def __init__(self, request: "Request", reason: RejectReason, detail: str):
+        super().__init__(
+            f"request {request.rid} rejected ({reason.value}): {detail}"
+        )
+        self.request = request
+        self.reason = reason
+
+
+class SchedulerStalledError(RuntimeError):
+    """``run()`` hit ``max_steps`` with work still pending.
+
+    The message carries a full diagnostic dump — queue depth, free
+    pages/slots, and per-request state (rid, state, slot, prefill position,
+    generated count, KV length, priority) — so a stall names the stuck
+    request instead of leaving a context-free failure.
+    """
 
 
 class PrefixIndex:
@@ -236,7 +312,16 @@ class RequestState(enum.Enum):
     WAITING = "waiting"
     PREFILL = "prefill"
     RUNNING = "running"
-    FINISHED = "finished"
+    FINISHED = "finished"    # terminal: completed max_new tokens
+    PREEMPTED = "preempted"  # terminal: evicted with replay budget exhausted
+    REJECTED = "rejected"    # terminal: never admitted (see RejectReason)
+
+
+#: The states a request can end in — every submitted request reaches
+#: exactly one of these (the chaos suite's terminal-accounting invariant).
+TERMINAL_STATES = frozenset({
+    RequestState.FINISHED, RequestState.PREEMPTED, RequestState.REJECTED,
+})
 
 
 @dataclasses.dataclass
@@ -247,11 +332,23 @@ class Request:
     prompt's last prefill logits).  ``fed`` counts decode inputs consumed
     since the last (re-)prefill: while ``fed + 1 < len(generated)`` the
     request is replaying after an eviction and decode outputs are discarded.
+
+    SLA fields: ``priority`` orders admission and shields against
+    preemption (higher wins; default 0).  ``deadline_steps`` bounds the
+    scheduler steps from submission to completion — an infeasible deadline
+    is rejected at submit, and one that expires while queued is rejected
+    as pool-busy rather than served late.  ``replay_budget`` caps the total
+    tokens (prompt + generated) this request may replay across evictions;
+    exhausting it turns the next eviction into the terminal ``preempted``
+    state with the partial output retained.
     """
 
     rid: int
     prompt: np.ndarray
     max_new: int
+    priority: int = 0
+    deadline_steps: Optional[int] = None
+    replay_budget: Optional[int] = None
     on_token: Optional[Callable[["Request", int], None]] = None
     on_finish: Optional[Callable[["Request"], None]] = None
 
@@ -262,6 +359,11 @@ class Request:
     fed: int = 0              # decode inputs consumed since (re-)prefill
     n_evictions: int = 0
     admit_order: int = -1
+    replay_spent: int = 0     # tokens charged against replay_budget so far
+    submit_step: int = -1
+    finish_step: int = -1
+    reject_reason: Optional[RejectReason] = None
+    _order: int = -1          # submission sequence (queue tie-break)
 
     @property
     def prompt_len(self) -> int:
@@ -274,6 +376,19 @@ class Request:
     @property
     def replaying(self) -> bool:
         return self.fed + 1 < len(self.generated)
+
+    @property
+    def replay_cost(self) -> int:
+        """Tokens an eviction would force back through the model: the full
+        prompt re-prefills and every generated-so-far token re-decodes."""
+        return self.prompt_len + len(self.generated)
+
+    @property
+    def deadline_step(self) -> float:
+        """Absolute step this request must finish by (inf if no deadline)."""
+        if self.deadline_steps is None:
+            return float("inf")
+        return self.submit_step + self.deadline_steps
 
 
 @dataclasses.dataclass
@@ -291,10 +406,16 @@ class StepRecord:
 @dataclasses.dataclass
 class ServeStats:
     records: List[StepRecord] = dataclasses.field(default_factory=list)
-    n_evictions: int = 0
+    n_evictions: int = 0            # evict-and-requeue events (replayable)
     wall_s: float = 0.0
     prefill_tokens_saved: int = 0   # prompt tokens mapped instead of prefilled
     cow_copies: int = 0             # copy-on-write page copies performed
+    n_preempted: int = 0            # terminal preemptions (budget exhausted)
+    n_rejected: int = 0             # terminal rejections (any reason)
+    reject_reasons: Dict[str, int] = dataclasses.field(default_factory=dict)
+    deadline_misses: int = 0        # deadline requests rejected or late
+    n_stragglers: int = 0           # watchdog-flagged slow steps
+    n_prefix_drops: int = 0         # fault-injected prefix-index drops
 
     @property
     def decode_steps(self) -> int:
@@ -409,7 +530,9 @@ class Scheduler:
     """Continuous-batching scheduler driving a :class:`PagedLM`."""
 
     def __init__(self, model: PagedLM, cache: PagedKVCache, chunk: int = 8,
-                 prefix_sharing: bool = False):
+                 prefix_sharing: bool = False,
+                 faults: Optional[FaultPlan] = None,
+                 watchdog: Optional[Any] = None):
         # Element width drives the traffic accounting AND the math the model
         # runs, so any model/cache width mismatch (not just int8-vs-float)
         # must fail loudly rather than mis-report PACK bytes.
@@ -427,12 +550,21 @@ class Scheduler:
         self.prefix_index: Optional[PrefixIndex] = (
             PrefixIndex(cache.page_size) if prefix_sharing else None
         )
-        self.queue: Deque[Request] = deque()
+        #: Injected fault schedule (chaos testing); None = fault-free.
+        self.faults = faults
+        #: Anything with ``observe(dt, injected=...) -> bool`` — typically a
+        #: :class:`repro.runtime.fault_tolerance.StragglerWatchdog`.
+        self.watchdog = watchdog
+        #: Priority/deadline-ordered wait queue (head = next to admit).
+        self.queue: List[Request] = []
         self.resident: List[Request] = []      # admission order
         self.finished: Dict[int, Request] = {}
+        self.preempted: Dict[int, Request] = {}  # terminal: budget exhausted
+        self.rejected: Dict[int, Request] = {}   # terminal: never admitted
         self.stats = ServeStats()
         self._step = 0
         self._admit_counter = 0
+        self._submit_counter = 0
         self._free_slots = list(range(cache.page_table.shape[0]))[::-1]
 
     # -- public API ---------------------------------------------------------
@@ -442,44 +574,210 @@ class Scheduler:
         # The last generated token is never fed back, so KV peaks one short.
         return request.prompt_len + max(request.max_new - 1, 0)
 
-    def submit(self, request: Request) -> None:
-        worst = self.cache.pages_for(self._max_kv(request))
-        if worst > self.cache.total_pages:
-            raise OutOfPages(
-                f"request {request.rid} needs up to {worst} pages; the pool "
-                f"holds {self.cache.total_pages}"
-            )
-        if self._max_kv(request) > (
-            self.cache.pages_per_seq * self.cache.page_size
-        ):
-            raise ValueError(
-                f"request {request.rid} exceeds the per-sequence table row"
-            )
+    def _min_steps(self, request: Request) -> int:
+        """Minimum scheduler steps from admission to completion: one per
+        prefill chunk (the last emits the first token), plus one decode
+        boundary when more tokens remain (fusion covers any length)."""
+        prefill = -(-request.prompt_len // self.chunk)
+        return prefill + (1 if request.max_new > 1 else 0)
+
+    def _queue_key(self, r: Request) -> Tuple[int, float, int]:
+        """Admission order: priority desc, deadline asc, submission order.
+
+        An evicted request keeps its original ``_order``, so it re-enters
+        ahead of later arrivals of equal priority — the behaviour the old
+        FIFO ``appendleft`` re-queue had.
+        """
+        return (-r.priority, r.deadline_step, r._order)
+
+    def _queue_push(self, r: Request) -> None:
+        self.queue.append(r)
+        self.queue.sort(key=self._queue_key)  # stable; queues are small
+
+    def _reject(self, request: Request, reason: RejectReason, detail: str,
+                strict: bool) -> bool:
+        """Move ``request`` to the terminal REJECTED state (non-fatal)."""
+        request.state = RequestState.REJECTED
+        request.reject_reason = reason
+        request.finish_step = self._step
+        self.rejected[request.rid] = request
+        self.stats.n_rejected += 1
+        self.stats.reject_reasons[reason.value] = (
+            self.stats.reject_reasons.get(reason.value, 0) + 1
+        )
+        if request.deadline_steps is not None:
+            self.stats.deadline_misses += 1
+        if strict:
+            raise RequestRejected(request, reason, detail)
+        return False
+
+    def submit(self, request: Request, strict: bool = True) -> bool:
+        """Queue a request, or reject it with a typed, non-fatal reason.
+
+        Returns ``True`` when queued.  A request that can never be served
+        (``NEVER_FITS``) or whose deadline is impossible even on an idle
+        pool (``DEADLINE_INFEASIBLE``) goes straight to the terminal
+        ``REJECTED`` state; with ``strict=True`` (default) a
+        :class:`RequestRejected` is also raised so misuse is loud, with
+        ``strict=False`` submit just returns ``False``.  Either way the
+        scheduler remains fully consistent — rejection is bookkeeping, not
+        a failure.
+        """
         if request.max_new < 1:
             raise ValueError(
                 f"request {request.rid}: max_new must be >= 1"
             )
+        request.submit_step = self._step
+        worst = self.cache.pages_for(self._max_kv(request))
+        if worst > self.cache.total_pages:
+            return self._reject(
+                request, RejectReason.NEVER_FITS,
+                f"needs up to {worst} pages; the pool holds "
+                f"{self.cache.total_pages}", strict,
+            )
+        if self._max_kv(request) > (
+            self.cache.pages_per_seq * self.cache.page_size
+        ):
+            return self._reject(
+                request, RejectReason.NEVER_FITS,
+                f"prompt+generation ({self._max_kv(request)} tokens) exceeds "
+                f"the {self.cache.pages_per_seq}-page table row", strict,
+            )
+        if (request.deadline_steps is not None
+                and request.deadline_steps < self._min_steps(request)):
+            return self._reject(
+                request, RejectReason.DEADLINE_INFEASIBLE,
+                f"deadline of {request.deadline_steps} steps is below the "
+                f"{self._min_steps(request)}-step minimum", strict,
+            )
         request.state = RequestState.WAITING
-        self.queue.append(request)
+        request._order = self._submit_counter
+        self._submit_counter += 1
+        self._queue_push(request)
+        return True
+
+    def _stall_report(self, max_steps: int) -> str:
+        """Diagnostic dump for SchedulerStalledError: names every stuck
+        request with enough state to see *why* it is stuck."""
+        lens = self._lengths()
+        lines = [
+            f"scheduler stalled after {max_steps} steps: "
+            f"{len(self.queue)} queued, {len(self.resident)} resident, "
+            f"{self.cache.n_free}/{self.cache.total_pages} pages free, "
+            f"{len(self._free_slots)} slots free",
+        ]
+        for r in list(self.resident) + list(self.queue):
+            kv = int(lens[r.slot]) if r.slot >= 0 else 0
+            lines.append(
+                f"  request {r.rid}: state={r.state.value} slot={r.slot} "
+                f"prefill_pos={r.prefill_pos}/{r.prompt_len} "
+                f"generated={len(r.generated)}/{r.max_new} kv_len={kv} "
+                f"priority={r.priority} evictions={r.n_evictions}"
+            )
+        return "\n".join(lines)
 
     def run(self, max_steps: int = 100_000) -> Dict[int, List[int]]:
-        """Drive all submitted requests to completion."""
+        """Drive all submitted requests to a terminal state.
+
+        Returns the completed outputs (``finished`` only); preempted and
+        rejected requests are tracked in :attr:`preempted` /
+        :attr:`rejected` with their partial state.  Raises
+        :class:`SchedulerStalledError` — with a full per-request dump —
+        if work is still pending after ``max_steps``.
+        """
         t0 = time.perf_counter()
         while (self.queue or self.resident) and self._step < max_steps:
             self.step()
         self.stats.wall_s += time.perf_counter() - t0
         if self.queue or self.resident:
-            raise RuntimeError(f"scheduler stalled after {max_steps} steps")
+            raise SchedulerStalledError(self._stall_report(max_steps))
         return {rid: r.generated for rid, r in sorted(self.finished.items())}
 
     def step(self) -> None:
-        """One scheduler iteration: admit → one batched prefill chunk → fused
-        decode to the next scheduling boundary → retire."""
+        """One scheduler iteration: expire deadlines → admit → one batched
+        prefill chunk → fused decode to the next scheduling boundary →
+        retire.  Injected faults (``self.faults``) apply for the duration
+        of the step; its wall time (plus any injected latency) feeds the
+        watchdog."""
         self._step += 1
+        t0 = time.perf_counter()
+        if (self.faults is not None and self.prefix_index is not None
+                and self.faults.drop_prefix(self._step)):
+            self._drop_prefix_fault()
+        self._expire_deadlines()
         self._admit()
         self._prefill_all()
         self._decode()
         self._retire()
+        if self.watchdog is not None:
+            injected = (self.faults.delay(self._step)
+                        if self.faults is not None else 0.0)
+            if self.watchdog.observe(time.perf_counter() - t0,
+                                     injected=injected):
+                self.stats.n_stragglers += 1
+
+    # -- fault hooks ---------------------------------------------------------
+
+    def _effective_free(self) -> int:
+        """Free pages as scheduling policy sees them: zero while a forced
+        pool-exhaustion fault is active (the physical free list is
+        untouched — CoW and already-checked admissions still succeed)."""
+        if self.faults is not None and self.faults.exhaust(self._step):
+            return 0
+        return self.cache.n_free
+
+    def _alloc_denied(self) -> bool:
+        return (self.faults is not None
+                and self.faults.deny_alloc(self._step))
+
+    def _try_allocate(self, slot: int, n: int) -> bool:
+        """Allocate ``n`` pages for ``slot``; ``False`` instead of raising.
+
+        ``PagedKVCache.allocate`` is functional — on failure nothing was
+        committed, so the free/mapped/refcount partition is untouched and
+        the caller can simply defer (the crash-consistency guarantee the
+        chaos suite asserts via ``check_integrity``)."""
+        try:
+            self.cache = self.cache.allocate(slot, n)
+            return True
+        except OutOfPages:
+            return False
+
+    def _drop_prefix_fault(self) -> None:
+        """Fault: drop one seeded-random retained prefix chain.  Sharing is
+        an optimization, so victims of the drop simply re-prefill — the
+        chaos suite asserts outputs are unchanged."""
+        entries = list(self.prefix_index.entries)
+        if not entries:
+            return
+        rng = np.random.default_rng([self.faults.seed, self._step])
+        key = entries[int(rng.integers(len(entries)))]
+        pages = self.prefix_index.pop_chain(key)
+        self.cache = self.cache.release_pages(pages)
+        self.stats.n_prefix_drops += 1
+
+    def _expire_deadlines(self) -> None:
+        """Reject queued requests whose deadline can no longer be met.
+
+        Admitted even *this* step, a request finishes no earlier than
+        ``_step + _min_steps - 1``; when that overshoots the deadline the
+        request is rejected as POOL_BUSY rather than served late.  Resident
+        requests are never killed by a deadline — they finish and count a
+        deadline miss instead (killing mid-flight work would waste the
+        pages it already filled).
+        """
+        expired = [
+            r for r in self.queue
+            if r.deadline_steps is not None
+            and self._step + self._min_steps(r) - 1 > r.deadline_step
+        ]
+        for r in expired:
+            self.queue.remove(r)
+            self._reject(
+                r, RejectReason.POOL_BUSY,
+                f"deadline at step {int(r.deadline_step)} can no longer be "
+                f"met at step {self._step}", strict=False,
+            )
 
     # -- host shadow state ---------------------------------------------------
 
@@ -501,7 +799,7 @@ class Scheduler:
         request's written content (prompt pages for a request still in
         prefill)."""
         for r in sorted(self.resident, key=lambda x: -x.admit_order):
-            if self.cache.n_free >= need:
+            if self._effective_free() >= need:
                 return
             if r.state is RequestState.PREFILL:
                 floor = self.cache.pages_for(r.prompt_len)
@@ -523,7 +821,7 @@ class Scheduler:
         if self.prefix_index is None:
             return
         for key in list(self.prefix_index.entries):
-            if self.cache.n_free >= need:
+            if self._effective_free() >= need:
                 return
             if key not in self.prefix_index.entries or key in keep:
                 continue  # already popped as part of an earlier chain
@@ -591,16 +889,18 @@ class Scheduler:
             need = (self.cache.pages_for(
                 min(r.prompt_len + 1, self._max_kv(r))
             ) - len(shared) + cow_extra)
-            if self.cache.n_free < need:
+            if need > 0 and self._alloc_denied():
+                return  # fault: allocations fail this step; retry next step
+            if self._effective_free() < need:
                 self._reclaim_lookahead(need)
-            if self.cache.n_free < need and self.prefix_index is not None:
+            if self._effective_free() < need and self.prefix_index is not None:
                 self._drop_retained(
                     need,
                     keep=self.prefix_index.prefix_keys(r.prompt, len(shared)),
                 )
-            if self.cache.n_free < need:
+            if self._effective_free() < need:
                 return
-            self.queue.popleft()
+            self.queue.pop(0)
             r.slot = self._free_slots.pop()
             r.state = RequestState.PREFILL
             r.prefill_pos = tail_start
@@ -814,26 +1114,38 @@ class Scheduler:
 
     def _grow_pages(self, running: List[Request]) -> List[Request]:
         """Allocate a page for every running request whose next token lands on
-        a page boundary, evicting the youngest resident when the pool runs
-        dry (the requester itself defers when it *is* the youngest).
+        a page boundary, evicting the cheapest low-priority resident when the
+        pool runs dry (the requester itself defers when it *is* the victim).
         Returns the requests that still run this step."""
         lengths = self._lengths()
+        deferred: set = set()
         for r in sorted(running, key=lambda x: x.admit_order):
             if r.state is not RequestState.RUNNING:
-                continue  # evicted below by an older request's allocation
+                continue  # evicted below by another request's allocation
             ln = int(lengths[r.slot])
             if ln < self.cache._mapped(r.slot) * self.cache.page_size:
                 continue  # headroom left in the last mapped page
+            if self._alloc_denied():
+                # Fault: allocations fail this step.  The request keeps its
+                # slot and pages but sits out this step's decode; growth is
+                # retried at the next boundary.  Nothing was mutated, so the
+                # pool stays consistent (the crash-consistency contract).
+                deferred.add(r.rid)
+                continue
             while (r.state is RequestState.RUNNING
-                   and self.cache.n_free < 1):
+                   and self._effective_free() < 1):
                 # Retained-but-unshared prefix pages are the cheapest relief
-                # (no resident loses work); then evict the youngest.  Each
+                # (no resident loses work); then evict the lowest-priority
+                # resident with the cheapest replay (youngest on ties).  Each
                 # iteration frees a page, removes a resident, or empties the
                 # index, so the loop terminates.
                 self._drop_retained(1)
-                if self.cache.n_free >= 1:
+                if self._effective_free() >= 1:
                     break
-                victim = max(self.resident, key=lambda x: x.admit_order)
+                victim = min(
+                    self.resident,
+                    key=lambda x: (x.priority, x.replay_cost, -x.admit_order),
+                )
                 if victim is r and len(self.resident) == 1:
                     if (self.prefix_index is not None
                             and self.prefix_index.entries):
@@ -841,14 +1153,21 @@ class Scheduler:
                         # request shares — it keeps its own mappings.
                         self.flush_prefix_cache()
                         continue
-                    # Unreachable given the submit() worst-case guard.
-                    raise OutOfPages(
-                        "page pool exhausted with a single resident request"
-                    )
+                    # Pool truly (or by injected fault) cannot grow the only
+                    # resident: it defers by self-eviction — requeued for
+                    # replay, or preempted when its budget is spent.  Never
+                    # an exception out of run().
+                    self._evict(r)
+                    break
                 self._evict(victim)  # may be r itself: it defers, not others
-            if r.state is RequestState.RUNNING:
-                self.cache = self.cache.allocate(r.slot, 1)
-        still = [r for r in running if r.state is RequestState.RUNNING]
+            if r.state is RequestState.RUNNING and not self._try_allocate(
+                r.slot, 1
+            ):
+                deferred.add(r.rid)
+        still = [
+            r for r in running
+            if r.state is RequestState.RUNNING and r.rid not in deferred
+        ]
         # Opportunistic lookahead: when nothing can be admitted or prefilled
         # before the next boundary AND the free pool covers *every* running
         # request's full remaining generation, map those pages up front, so
@@ -857,7 +1176,7 @@ class Scheduler:
         # starve a peer's imminent on-demand growth (no extra evictions
         # versus the on-demand policy); under pool pressure it simply stays
         # off and behaviour is exactly the on-demand path.
-        if not self.queue and not any(
+        if not self.queue and not self._alloc_denied() and not any(
             x.state is RequestState.PREFILL for x in self.resident
         ):
             lens = self._lengths()
@@ -867,23 +1186,40 @@ class Scheduler:
                 ) - self.cache._mapped(r.slot))
                 for r in still
             }
-            if sum(max(w, 0) for w in wants.values()) <= self.cache.n_free:
+            if sum(max(w, 0) for w in wants.values()) <= self._effective_free():
                 for r in sorted(still, key=lambda x: x.admit_order):
                     if wants[r.rid] > 0:
                         self.cache = self.cache.allocate(r.slot, wants[r.rid])
         return still
 
     def _evict(self, r: Request) -> None:
+        """Release ``r``'s pages and slot, then requeue it for bit-identical
+        replay — unless replaying it would blow its ``replay_budget``, in
+        which case it lands in the terminal PREEMPTED state with its partial
+        output intact."""
+        cost = r.replay_cost  # before release: prompt + tokens to re-derive
         self.cache = self.cache.release(r.slot)
         self.resident.remove(r)
         self._free_slots.append(r.slot)
         r.slot = -1
-        r.state = RequestState.WAITING
         r.prefill_pos = 0
         r.fed = 0
+        if (r.replay_budget is not None
+                and r.replay_spent + cost > r.replay_budget):
+            r.state = RequestState.PREEMPTED
+            r.finish_step = self._step
+            self.preempted[r.rid] = r
+            self.stats.n_preempted += 1
+            if r.deadline_steps is not None:
+                self.stats.deadline_misses += 1
+            return
+        r.replay_spent += cost
+        r.state = RequestState.WAITING
         r.n_evictions += 1
         self.stats.n_evictions += 1
-        self.queue.appendleft(r)  # re-admit first: FIFO fairness preserved
+        # Keeps its original submission order, so among equal priorities it
+        # re-admits first — the FIFO fairness the old appendleft gave.
+        self._queue_push(r)
 
     # -- retirement ---------------------------------------------------------
 
@@ -894,6 +1230,10 @@ class Scheduler:
             self._free_slots.append(r.slot)
             r.slot = -1
             r.state = RequestState.FINISHED
+            r.finish_step = self._step
+            if (r.deadline_steps is not None
+                    and r.finish_step > r.deadline_step):
+                self.stats.deadline_misses += 1
             self.finished[r.rid] = r
             if r.on_finish:
                 r.on_finish(r)

@@ -20,9 +20,12 @@ from repro.serve import (
     OutOfPages,
     PagedKVCache,
     PagedLM,
+    RejectReason,
     Request,
+    RequestRejected,
     RequestState,
     Scheduler,
+    SchedulerStalledError,
     static_batch_generate,
 )
 
@@ -60,8 +63,49 @@ def test_admission_blocks_when_pool_full():
 def test_submit_rejects_request_larger_than_pool():
     cache = PagedKVCache.create(CFG, batch=1, max_len=8, page=4, pool_pages=1)
     sched = Scheduler(MODEL, cache, chunk=4)
-    with pytest.raises(OutOfPages):
-        sched.submit(Request(rid=0, prompt=np.zeros(8, np.int32), max_new=4))
+    req = Request(rid=0, prompt=np.zeros(8, np.int32), max_new=4)
+    with pytest.raises(RequestRejected) as exc:
+        sched.submit(req)
+    # Typed, non-fatal rejection: the request is terminal, not lost, and the
+    # scheduler stays usable.
+    assert exc.value.reason is RejectReason.NEVER_FITS
+    assert req.state is RequestState.REJECTED
+    assert sched.rejected[0] is req
+    assert sched.stats.n_rejected == 1
+    # Non-strict submission reports rather than raises.
+    req2 = Request(rid=1, prompt=np.zeros(8, np.int32), max_new=4)
+    assert sched.submit(req2, strict=False) is False
+    assert req2.reject_reason is RejectReason.NEVER_FITS
+
+
+def test_submit_rejects_infeasible_deadline():
+    cache = PagedKVCache.create(CFG, batch=2, max_len=16, page=4)
+    sched = Scheduler(MODEL, cache, chunk=4)
+    # 8-token prompt at chunk=4 needs 2 prefill steps + 1 decode boundary.
+    req = Request(rid=0, prompt=np.zeros(8, np.int32), max_new=4,
+                  deadline_steps=2)
+    assert sched.submit(req, strict=False) is False
+    assert req.reject_reason is RejectReason.DEADLINE_INFEASIBLE
+    assert sched.stats.deadline_misses == 1
+    # The same request with a feasible deadline is served.
+    ok = Request(rid=1, prompt=np.zeros(8, np.int32), max_new=4,
+                 deadline_steps=8)
+    assert sched.submit(ok) is True
+    sched.run()
+    assert len(sched.finished[1].generated) == 4
+    assert sched.stats.deadline_misses == 1  # met: no new miss
+
+
+def test_stall_diagnostic_names_stuck_request():
+    cache = PagedKVCache.create(CFG, batch=2, max_len=32, page=4)
+    sched = Scheduler(MODEL, cache, chunk=4)
+    sched.submit(Request(rid=7, prompt=np.zeros(16, np.int32), max_new=8))
+    with pytest.raises(SchedulerStalledError) as exc:
+        sched.run(max_steps=1)  # prefill alone needs 4 steps
+    msg = str(exc.value)
+    assert "request 7" in msg
+    assert "queued" in msg and "pages free" in msg
+    assert "prefill_pos=4/16" in msg
 
 
 # ---------------------------------------------------------------------------
