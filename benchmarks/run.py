@@ -159,6 +159,25 @@ def main() -> None:
               f"plain_pack_eff={row['plain_pack_eff']:.1%},"
               f"outputs_match={row['outputs_match']}")
 
+    # ---- Serving, model families: recurrent state through the same
+    # scheduler.  RWKV6/Mamba serve out of fixed-size state slots via the
+    # ServableFamily protocol; the accounting dialect flips from indirect
+    # page walks to strided state bursts (no index-bus term), and every row
+    # asserts bit-for-bit equality with the direct sequential forward.
+    from .serving import family_rows
+    print("\n# Serving families: recurrent models (strided state bursts) "
+          "through the shared scheduler (outputs bit-for-bit vs direct "
+          "forward)")
+    frows = family_rows(quick=args.quick)
+    for row in frows:
+        print(f"serving_families,{row['family']},b={row['batch']},"
+              f"tokens_s={row['tokens_per_s']:.0f},"
+              f"decode_steps={row['decode_steps']},"
+              f"pack_KiB={row['pack_kib']:.0f},base_KiB={row['base_kib']:.0f},"
+              f"pack_eff={row['pack_eff']:.1%},base_eff={row['base_eff']:.1%},"
+              f"state_slot_bytes={row['state_slot_bytes']},"
+              f"outputs_match={row['outputs_match']}")
+
     # ---- Serving, degradation: throughput under pool pressure + chaos ---
     # Mixed-SLA workload vs shrinking pools and a seeded fault plan: the
     # robustness counters (evictions / preemptions / rejections / deadline
@@ -219,6 +238,7 @@ def main() -> None:
                 ) for r in irows],
             },
             "serving_shared_prefix": {"rows": prows},
+            "serving_families": {"rows": frows},
             "serving_degradation": {"rows": drows},
         }
         with open(args.json, "w") as f:

@@ -25,6 +25,16 @@ replaced by a refcount bump plus the effective prefill PACK efficiency
 (shared tokens cost only the remapped table indices — the Ferry-style
 dedup-before-packing multiplier on the serving path).
 
+The ``serving_families`` section serves *recurrent* models (RWKV6, Mamba)
+through the very same scheduler via the :class:`repro.serve.ServableFamily`
+protocol: fixed-size state slots instead of growing page chains, and
+strided-burst PACK/BASE accounting (no index-bus term — the stride is the
+descriptor) instead of indirect page walks.  Each row asserts the scheduled
+outputs are bit-for-bit the direct sequential forward
+(:func:`repro.serve.recurrent_reference_generate` at the same batch shape)
+before reporting throughput, so the benchmark doubles as the family
+protocol's end-to-end correctness gate.
+
 The measured run is steady-state: the warmup pass executes the *same*
 workload so every jit entry the fused decode fast path uses (pow2 scan
 lengths, prefill context buckets) is compiled before the clock starts, and
@@ -47,9 +57,11 @@ from repro.serve import (
     FaultPlan,
     PagedKVCache,
     PagedLM,
+    RecurrentLM,
     Request,
     Scheduler,
     build_prefill_rows,
+    recurrent_reference_generate,
 )
 
 PAGE = 8
@@ -285,6 +297,80 @@ def degradation_rows(
                 for rid, r in sched.finished.items()
             ),
         })
+    return rows
+
+
+def family_rows(
+    archs: Sequence[str] = ("rwkv6", "mamba"),
+    batch_sizes: Sequence[int] = (2, 4),
+    n_new: int = 8,
+    max_prompt: int = 16,
+    quick: bool = False,
+    repeats: int = 3,
+) -> List[Dict]:
+    """Recurrent families through the shared scheduler, one row per
+    (arch, batch).
+
+    Every row first runs the workload once untimed to (a) compile all jit
+    entries and (b) assert the scheduled outputs equal the direct
+    sequential forward bit-for-bit (``outputs_match`` — CI fails the
+    artifact when False).  The strided PACK efficiency is ≈ 1 by
+    construction (dense fixed-stride state rows, no index tax) while BASE
+    efficiency is the occupancy — the serving-side contrast between the
+    paper's two packed burst dialects.
+    """
+    if quick:
+        batch_sizes = (2,)
+    arch_cfg = {"rwkv6": "rwkv6-3b", "mamba": "yi-6b"}
+    rng = np.random.default_rng(5)
+    rows = []
+    for arch in archs:
+        cfg = smoke_config(arch_cfg[arch])
+        model = RecurrentLM(cfg, jax.random.PRNGKey(0), arch=arch,
+                            impl="ref")
+        for b in batch_sizes:
+            lens = rng.integers(4, max_prompt + 1, b)
+            prompts = [rng.integers(0, cfg.vocab, int(n)).astype(np.int32)
+                       for n in lens]
+            want = recurrent_reference_generate(
+                model, model.init_pool(b), prompts, n_new
+            )
+
+            def _run() -> Scheduler:
+                sched = Scheduler(model, model.init_pool(b), chunk=CHUNK)
+                for i, p in enumerate(prompts):
+                    sched.submit(Request(rid=i, prompt=p, max_new=n_new))
+                sched.run()
+                return sched
+
+            warm = _run()  # warmup + correctness gate
+            out = {rid: r.generated for rid, r in warm.finished.items()}
+            match = out == {i: want[i] for i in range(b)}
+            wall = float("inf")
+            for _ in range(max(1, repeats)):
+                t0 = time.perf_counter()
+                sched = _run()
+                wall = min(wall, time.perf_counter() - t0)
+            st = sched.stats
+            fam = sched.family
+            rows.append({
+                "family": arch,
+                "batch": b,
+                "tokens": st.tokens,
+                "wall_s": wall,
+                "tokens_per_s": st.tokens / wall,
+                "decode_steps": st.decode_steps,
+                "pack_kib": st.pack_bytes / 2**10,
+                "base_kib": st.base_bytes / 2**10,
+                "pack_eff": st.pack_efficiency,
+                "base_eff": st.base_efficiency,
+                "prefill_pack_eff": st.prefill_pack_efficiency,
+                "prefill_base_eff": st.prefill_base_efficiency,
+                "prompt_tokens": sum(len(p) for p in prompts),
+                "state_slot_bytes": fam.state_bytes(1),
+                "pool_bytes": fam.pool_bytes,
+                "outputs_match": match,
+            })
     return rows
 
 

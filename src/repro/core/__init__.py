@@ -17,6 +17,7 @@ from .streams import (
     elements_per_beat,
     page_table_streams,
     prefill_table_streams,
+    recurrent_state_streams,
 )
 from .packing import (
     Traffic,
@@ -27,6 +28,8 @@ from .packing import (
     paged_decode_traffic,
     paged_prefill_traffic,
     prefill_page_counts,
+    recurrent_decode_traffic,
+    recurrent_prefill_traffic,
     strided_traffic,
     unpack_indirect,
     unpack_strided,

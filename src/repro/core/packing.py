@@ -30,6 +30,8 @@ __all__ = [
     "prefill_page_counts",
     "paged_prefill_traffic",
     "prefix_share_traffic",
+    "recurrent_decode_traffic",
+    "recurrent_prefill_traffic",
 ]
 
 
@@ -319,3 +321,67 @@ def prefix_share_traffic(
     idx = n_pages * index_bytes
     idx = int(np.ceil(idx / granule_bytes)) * granule_bytes if idx else 0
     return Traffic(useful, base, 0, 0, idx, shared_pages=n_pages)
+
+
+def recurrent_decode_traffic(
+    n_active: int,
+    batch: int,
+    state_bytes: int,
+    granule_bytes: int = 32,
+) -> Traffic:
+    """Traffic of one recurrent (RWKV/Mamba) decode step, BASE vs PACK.
+
+    The strided-burst sibling of :func:`paged_decode_traffic`: a decode
+    step is a read-modify-write of each active sequence's fixed-size state
+    (``state_bytes`` per sequence — all layers, all state tensors), laid
+    out (layer, slot) so one sequence's rows sit at a fixed stride of
+    ``batch`` rows (the :func:`repro.core.streams.recurrent_state_streams`
+    descriptors).  No index vector exists — the stride *is* the
+    descriptor — so unlike the indirect dialect there is no
+    ``index_bus_bytes`` term at all.
+
+    * **BASE** is the padded-batch server: it streams the whole (layer,
+      batch) state pool through (read + write) regardless of how many
+      slots are live — ``2 × batch × state_bytes``.
+    * **PACK** issues one strided burst pair per active slot, moving
+      exactly its rows (densely packed; granule-rounded):
+      ``2 × n_active × state_bytes``.
+    * ``useful_bytes`` equals PACK's payload — recurrent state has no dead
+      tokens inside a row, so the strided PACK efficiency is ≈ 1 by
+      construction while BASE efficiency is the occupancy ``A / batch``.
+      That contrast (indirect pays the r/(r+1) index tax, strided does
+      not) is exactly the Fig. 3 comparison the serving benchmark reports.
+    """
+    useful = 2 * int(n_active) * int(state_bytes)
+    pack = int(np.ceil(useful / granule_bytes)) * granule_bytes if useful else 0
+    base = 2 * int(batch) * int(state_bytes)
+    return Traffic(useful, base, pack, 0)
+
+
+def recurrent_prefill_traffic(
+    counts,
+    batch: int,
+    state_bytes: int,
+    granule_bytes: int = 32,
+) -> Traffic:
+    """Traffic of one batched recurrent prefill chunk, BASE vs PACK.
+
+    A fused prefill chunk loads each pending sequence's state once, scans
+    ``counts[r]`` prompt tokens on-chip, and writes the state back once —
+    so PACK moves the same ``2 × state_bytes`` per active row a decode
+    step does, *independent of the chunk length* (the recurrent analogue
+    of prefill's context-read amortization).
+
+    * **BASE** is the packing-oblivious server that re-streams the padded
+      (layer, batch) pool per token position of the chunk:
+      ``2 × batch × max(counts) × state_bytes``.
+    * **PACK** / ``useful_bytes``: ``2 × n_active × state_bytes``,
+      granule-rounded (strided bursts are dense — no index term).
+    """
+    ct = np.asarray(counts, dtype=np.int64)
+    n_active = int(np.count_nonzero(ct))
+    chunk = int(ct.max()) if ct.size else 0
+    useful = 2 * n_active * int(state_bytes)
+    pack = int(np.ceil(useful / granule_bytes)) * granule_bytes if useful else 0
+    base = 2 * int(batch) * chunk * int(state_bytes)
+    return Traffic(useful, base, pack, 0)

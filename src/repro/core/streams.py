@@ -36,6 +36,7 @@ __all__ = [
     "page_table_streams",
     "prefill_table_streams",
     "share_table_streams",
+    "recurrent_state_streams",
 ]
 
 
@@ -325,6 +326,54 @@ def share_table_streams(
             remap_only=True,
         ),
     )
+
+
+def recurrent_state_streams(
+    slots: Sequence[int],
+    batch: int,
+    n_layers: int,
+    row_bytes: Sequence[int],
+) -> Tuple["StridedStream", ...]:
+    """Strided read-modify-write descriptors for one recurrent decode step.
+
+    The strided-burst sibling of :func:`page_table_streams`: recurrent
+    (RWKV/Mamba) serving state is fixed-size per sequence and lives in
+    pools of shape ``(n_layers, batch, *row)``.  Flattened to
+    ``(n_layers × batch)`` rows, one sequence's state sits at rows
+    ``slot, slot + batch, slot + 2·batch, …`` — a textbook strided stream:
+    ``base = slot``, ``stride = batch``, ``count = n_layers``, with the
+    whole per-layer row as the element.  No memory-resident index vector
+    exists; the stride in the request descriptor is the entire addressing
+    metadata (the ``pack``/``indir=0`` encoding of the paper).
+
+    A decode step both reads and writes the state, so *two* descriptors
+    are emitted per (active slot, state tensor): the read burst and the
+    write-back burst.  ``row_bytes`` carries one per-layer row footprint
+    per state tensor (RWKV6 has one — the (H, 64, 64) wkv state; Mamba has
+    two — the SSM state and the conv tail).
+
+    With ``batch == 1`` the stride degenerates to 1 and the descriptor
+    routes to the BASE converter (the never-slower-than-AXI4 guarantee),
+    exactly like :class:`StridedStream` always does.
+
+    The family builds these each step and derives the
+    :func:`repro.core.packing.recurrent_decode_traffic` accounting from the
+    same (slots, batch, layers, bytes) quantities, so descriptors and byte
+    accounting share one source of truth — mirroring the paged path.
+    """
+    out = []
+    for slot in slots:
+        for rb in row_bytes:
+            for _ in range(2):  # read burst + write-back burst
+                out.append(
+                    StridedStream(
+                        base=int(slot),
+                        elem_bits=int(rb) * 8,
+                        count=int(n_layers),
+                        stride=int(batch),
+                    )
+                )
+    return tuple(out)
 
 
 def word_addresses(

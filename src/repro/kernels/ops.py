@@ -38,6 +38,8 @@ __all__ = [
     "on_cpu",
     "strided_gather",
     "strided_scatter",
+    "recurrent_state_read",
+    "recurrent_state_write",
     "indirect_gather",
     "indirect_scatter",
     "tiled_transpose",
@@ -105,6 +107,47 @@ def strided_scatter(
             dst, packed[main:], base + main * stride, stride
         )
     return strided_scatter_kernel(dst, packed, base, stride, interpret=_interpret())
+
+
+def _flat_state_view(pool: jax.Array) -> Tuple[jax.Array, int, int, int]:
+    """(L, B, *row) state pool → ((L·B, row) view, L, B, row_width)."""
+    l, b = int(pool.shape[0]), int(pool.shape[1])
+    row = int(np.prod(pool.shape[2:])) if pool.ndim > 2 else 1
+    return pool.reshape(l * b, row), l, b, row
+
+
+def recurrent_state_read(pool: jax.Array, slot: int, impl: str = "pallas") -> jax.Array:
+    """Gather one sequence's recurrent state rows from an (L, B, *row) pool.
+
+    Slot ``s`` of a layer-major pool is rows ``s, s+B, s+2B, ...`` of the
+    flat (L·B, row) view — exactly a strided burst with base=slot, stride=B,
+    count=L, which is the access the strided PACK converter accelerates.
+    """
+    if impl == "ref":
+        return ref.recurrent_state_read(pool, slot)
+    flat, l, b, row = _flat_state_view(pool)
+    pad = (-row) % 128  # strided converter packs ≥128-lane rows
+    if pad:
+        flat = jnp.pad(flat, [(0, 0), (0, pad)])
+    out = strided_gather(flat, int(slot), b, l, impl=impl)
+    return out[:, :row].reshape((l,) + pool.shape[2:])
+
+
+def recurrent_state_write(
+    pool: jax.Array, slot: int, value: jax.Array, impl: str = "pallas"
+) -> jax.Array:
+    """Scatter one sequence's state rows back into an (L, B, *row) pool —
+    the write half of the strided read-modify-write each decode step does."""
+    if impl == "ref":
+        return ref.recurrent_state_write(pool, slot, value)
+    flat, l, b, row = _flat_state_view(pool)
+    vflat = value.reshape(l, row)
+    pad = (-row) % 128
+    if pad:
+        flat = jnp.pad(flat, [(0, 0), (0, pad)])
+        vflat = jnp.pad(vflat, [(0, 0), (0, pad)])
+    out = strided_scatter(flat, vflat, int(slot), b, impl=impl)
+    return out[:, :row].reshape(pool.shape)
 
 
 def indirect_gather(

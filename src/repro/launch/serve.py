@@ -1,5 +1,13 @@
 """Serving launcher: load/init a model, run batched generation.
 
+Also home of :func:`dense_generate`, the minimal whole-cache prefill+decode
+greedy loop (the pre-paged serving baseline).  Production-shaped serving —
+paged or recurrent state pools, continuous batching, chaos — lives in
+:mod:`repro.serve`; this loop exists for launcher smoke runs and as the
+simplest reference generation path over the full ``repro.models.lm`` stack
+(norms, MLPs, w8a16 — everything the paged/recurrent serving engines
+deliberately strip away).
+
 Usage::
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
@@ -9,6 +17,7 @@ from __future__ import annotations
 
 import argparse
 import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -16,8 +25,41 @@ import numpy as np
 
 from repro.configs import get_config, smoke_config
 from repro.models import lm
-from repro.parallel.sharding import make_rules
-from repro.serve import ServeEngine
+from repro.parallel.sharding import ShardingRules, make_rules
+
+
+def _sample(logits, vocab: int, greedy: bool, rng, step: int):
+    logits = logits[..., :vocab]  # drop TP padding classes
+    if greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    key = jax.random.fold_in(rng, step)
+    return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+def dense_generate(
+    cfg, params, rules: ShardingRules, prompts: jax.Array, n_new: int,
+    max_len: int = 512, greedy: bool = True,
+    rng: Optional[jax.Array] = None,
+) -> np.ndarray:
+    """prompts (B, S0) int32 → (B, n_new) generated ids.
+
+    Whole-cache prefill then one decode step per token over the full LM
+    stack — the dense serving baseline the old ``ServeEngine`` wrapped.
+    """
+    b, s0 = prompts.shape
+    cache = lm.init_cache(cfg, b, max_len)
+    prefill = jax.jit(lambda p, bt, c: lm.prefill(p, bt, c, cfg, rules))
+    decode = jax.jit(
+        lambda p, t, c, pos: lm.decode_step(p, t, c, pos, cfg, rules)
+    )
+    logits, cache = prefill(params, {"tokens": prompts}, cache)
+    out = []
+    tok = _sample(logits[:, 0], cfg.vocab, greedy, rng, 0)
+    for i in range(n_new):
+        out.append(tok)
+        logits, cache = decode(params, tok[:, None], cache, s0 + i)
+        tok = _sample(logits, cfg.vocab, greedy, rng, i + 1)
+    return np.stack([np.asarray(t) for t in out], axis=1)
 
 
 def main() -> None:
@@ -36,14 +78,13 @@ def main() -> None:
         raise SystemExit(f"{cfg.name} is encoder-only: no decode step")
     rules = make_rules(with_pod=False, batch_axes=("data",))
     params = lm.init_model(cfg, jax.random.PRNGKey(args.seed))
-    engine = ServeEngine(cfg, params, rules, max_len=args.max_len,
-                         batch=args.batch)
     rng = np.random.default_rng(args.seed)
     prompts = jnp.asarray(
         rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32
     )
     t0 = time.monotonic()
-    out = engine.generate(prompts, args.new_tokens)
+    out = dense_generate(cfg, params, rules, prompts, args.new_tokens,
+                         max_len=args.max_len)
     dt = time.monotonic() - t0
     tps = args.batch * args.new_tokens / dt
     print(f"generated {out.shape} in {dt:.2f}s ({tps:.1f} tok/s)")

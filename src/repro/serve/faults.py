@@ -29,11 +29,14 @@ module provides the two tools that lock that contract down:
   from ``(seed, n_steps, intensities)`` so chaos runs replay bit-for-bit.
 
 * :func:`check_scheduler_invariants` — the step-wise consistency oracle
-  chaos tests assert after *every* scheduler step: pool free/owned
-  partition and refcount conservation (via
-  :meth:`repro.serve.PagedKVCache.check_integrity`), slot bookkeeping, no
-  orphaned host shadows, and every request in exactly one live or terminal
-  bucket (``done`` / ``preempted`` / ``rejected``).
+  chaos tests assert after *every* scheduler step: pool self-consistency
+  (via the family's ``check_integrity`` — free/owned partition and
+  refcount conservation for paged pools, slot-ownership partition for
+  recurrent state pools), slot bookkeeping, no orphaned host shadows, and
+  every request in exactly one live or terminal bucket (``done`` /
+  ``preempted`` / ``rejected``).  The checker speaks only the
+  :class:`repro.serve.family.ServableFamily` protocol, so one oracle
+  covers every model family the scheduler serves.
 """
 from __future__ import annotations
 
@@ -135,9 +138,10 @@ def check_scheduler_invariants(sched, requests: Optional[Sequence] = None,
     Checked after every step in the chaos suites (and usable anywhere — it
     reads only host-side state, never syncing the device):
 
-    1. **Pool integrity** — free/owned partition, refcount conservation
-       against page-table mappings + prefix retentions, host shadows
-       consistent (``PagedKVCache.check_integrity``).
+    1. **Pool integrity** — the family's own ``check_integrity``:
+       free/owned partition and refcount conservation against table
+       mappings + prefix retentions for paged pools; slot-ownership
+       partition for recurrent state pools.
     2. **Slot bookkeeping** — resident slots are distinct, and together
        with the free-slot stack they partition the batch.
     3. **State discipline** — queued requests are WAITING, residents are
@@ -149,18 +153,18 @@ def check_scheduler_invariants(sched, requests: Optional[Sequence] = None,
     """
     from .scheduler import RequestState  # local: avoid an import cycle
 
-    cache = sched.cache
+    fam = sched.family
     retained = (len(sched.prefix_index.entries)
                 if sched.prefix_index is not None else 0)
-    cache.check_integrity(retained=retained)
+    fam.check_integrity(retained=retained)
 
-    if sched.prefix_index is not None and cache.refcounts is not None:
+    if sched.prefix_index is not None and fam.supports_prefix_sharing:
         for page in sched.prefix_index.entries.values():
-            _require(cache.refcounts[int(page)] >= 1,
+            _require(fam.unit_refcount(int(page)) >= 1,
                      f"retained page {page} has no owner")
 
     # Slot partition: residents + free slots == all batch slots, no overlap.
-    batch = cache.page_table.shape[0]
+    batch = fam.batch
     res_slots = [r.slot for r in sched.resident]
     _require(len(set(res_slots)) == len(res_slots),
              f"duplicate resident slots: {res_slots}")

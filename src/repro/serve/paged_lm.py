@@ -1,0 +1,709 @@
+"""Paged transformer engine: an attention-only LM over the page pool.
+
+Split out of the old ``serve/engine.py`` next to ``serve/kv.py`` (the pool)
+and ``serve/family.py`` (the scheduler protocol).  This module owns the
+jitted prefill/decode programs, the :class:`PagedLM` wrapper that keeps the
+cache's host shadows in step, and :class:`PagedFamily` — the
+:class:`repro.serve.family.ServableFamily` implementation the scheduler
+drives (resource units = pages, streams = indirect page walks).
+
+The paged path is built as a *device-resident fast path*: the page pools are
+donated into every jitted call (``donate_argnums``) so they update in place
+instead of being copied per step, greedy sampling happens on device, and
+``decode_steps`` fuses ``n`` decode iterations into one ``lax.scan`` launch
+that feeds its own samples back — the host only sees tokens when the
+scheduler reaches a scheduling boundary (admission, page growth,
+retirement).  Host-side shadow state (``lengths_host``/``page_table_host``)
+lets all bookkeeping and traffic accounting run without a single
+device→host sync on the hot path.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.packing import (
+    Traffic,
+    paged_decode_traffic,
+    paged_prefill_traffic,
+    prefix_share_traffic,
+)
+from repro.core.streams import (
+    page_table_streams,
+    prefill_table_streams,
+    share_table_streams,
+)
+from repro.kernels import ops as kops
+from .family import ServableFamily
+from .kv import PagedKVCache, _donation_noop_ok
+
+__all__ = ["PagedFamily", "PagedLM", "static_batch_generate"]
+
+
+def _paged_lm_decode_step(params, tokens, k_pages, v_pages, k_scale, v_scale,
+                          page_table, lengths, active, *, h, kvh, hd, impl):
+    """One batched decode step against the paged pool.
+
+    tokens (B,) int32; active (B,) bool — inactive slots write nothing, keep
+    length 0 and produce zero attention.  Every array op is row-wise per
+    sequence, so slot placement / batch composition never changes a
+    sequence's bits.
+
+    ``k_scale``/``v_scale`` are the (L, P, page, KVH) fp32 scale pools of an
+    int8 KV pool, or ``None`` in full-precision mode: when given, the append
+    quantizes on write (codes + scales through the same indirect burst) and
+    attention dequantizes page-by-page in VMEM.
+
+    The per-layer pool updates are collected and stacked once at the end
+    (rather than chained through ``k_pages.at[l].set``), so the trace holds
+    one full-pool value instead of L intermediates; with the pools donated
+    at the jit boundary XLA aliases that single value back into the input
+    buffers — an in-place update of the resident pool.
+    """
+    n_layers = params["wq"].shape[0]
+    b = tokens.shape[0]
+    quantized = k_scale is not None
+    x = jnp.take(params["embed"], tokens, axis=0)          # (B, d)
+    new_len = lengths + active.astype(lengths.dtype)
+    kps, vps, kss, vss = [], [], [], []
+    for l in range(n_layers):
+        q = (x @ params["wq"][l]).reshape(b, h, hd)
+        kn = (x @ params["wk"][l]).reshape(b, kvh, hd)
+        vn = (x @ params["wv"][l]).reshape(b, kvh, hd)
+        scales = (dict(k_scale=k_scale[l], v_scale=v_scale[l])
+                  if quantized else {})
+        out = kops.paged_kv_append(
+            k_pages[l], v_pages[l], kn, vn, page_table, lengths, active,
+            impl=impl, **scales,
+        )
+        kp, vp = out[0], out[1]
+        ks, vs = (out[3], out[4]) if quantized else (None, None)
+        kps.append(kp)
+        vps.append(vp)
+        kss.append(ks)
+        vss.append(vs)
+        attn = kops.paged_decode_attention(
+            q, kp, vp, page_table, new_len, k_scale=ks, v_scale=vs, impl=impl
+        )
+        x = x + attn.reshape(b, h * hd) @ params["wo"][l]
+    logits = x @ params["embed"].T                          # (B, vocab)
+    return (logits, jnp.stack(kps), jnp.stack(vps),
+            jnp.stack(kss) if quantized else None,
+            jnp.stack(vss) if quantized else None, new_len)
+
+
+def _paged_lm_decode_steps(params, tokens, k_pages, v_pages, k_scale,
+                           v_scale, page_table, lengths, active, *, n, vocab,
+                           h, kvh, hd, impl):
+    """``n`` fused decode steps with on-device greedy sampling.
+
+    One ``lax.scan`` launch: each step runs the single-step core, argmaxes
+    its own logits on device, and feeds the sample back as the next input —
+    no logits or lengths ever cross to the host.  The scale pools (int8
+    mode) ride the scan carry next to the K/V pools.  Returns the (n, B)
+    token matrix, the final feed token (``toks[-1]``, returned from inside
+    the graph so chained launches never slice on the host), and the updated
+    pools/lengths; bitwise identical to ``n`` sequential
+    :func:`_paged_lm_decode_step` calls with host-side argmax.
+    """
+
+    def body(carry, _):
+        toks, kp, vp, ks, vs, lens = carry
+        logits, kp, vp, ks, vs, lens = _paged_lm_decode_step(
+            params, toks, kp, vp, ks, vs, page_table, lens, active,
+            h=h, kvh=kvh, hd=hd, impl=impl,
+        )
+        nxt = jnp.argmax(logits[:, :vocab], axis=-1).astype(jnp.int32)
+        return (nxt, kp, vp, ks, vs, lens), nxt
+
+    (last, k_pages, v_pages, k_scale, v_scale, lengths), toks = jax.lax.scan(
+        body, (tokens, k_pages, v_pages, k_scale, v_scale, lengths), None,
+        length=n,
+    )
+    return toks, last, k_pages, v_pages, k_scale, v_scale, lengths
+
+
+def _paged_lm_prefill_batch(params, tokens, counts, seqs, starts, k_pages,
+                            v_pages, k_scale, v_scale, page_table, lengths,
+                            *, h, kvh, hd, page, ctx_pages, impl):
+    """Advance every pending sequence by one prompt chunk, in one call.
+
+    tokens (R, C) int32 (row r zero-padded past ``counts[r]``); ``seqs`` maps
+    rows to batch slots and ``starts`` gives the absolute position of each
+    row's tokens[0].  Rows with ``counts[r] == 0`` are padding and touch
+    nothing.
+
+    KV rows are scattered through the chunk-bounded indirect write
+    (:func:`repro.kernels.ops.paged_kv_write_chunk` — R·W pages of traffic,
+    never the whole pool), and each layer's attention runs through
+    :func:`repro.kernels.ops.paged_prefill_attention` over only the leading
+    ``ctx_pages`` table entries per sequence (the pages that can hold
+    context for this chunk), never the full table row.  Under
+    ``impl='pallas'`` the context pages stream HBM→VMEM one at a time with
+    an online softmax (no gathered context or dense score tensor); under
+    ``impl='ref'`` the dense-einsum oracle runs, masked with a finite
+    constant so ``counts == 0`` padding rows can never produce NaN softmax
+    outputs that poison the donated pools.  ``k_scale``/``v_scale`` (int8
+    mode, or ``None``) make the chunk write quantize-on-write and the
+    attention dequantize per context page.  Returns the last *real* token's
+    logits per row plus the updated pools.
+    """
+    n_layers = params["wq"].shape[0]
+    r, c = tokens.shape
+    quantized = k_scale is not None
+    x = jnp.take(params["embed"], tokens, axis=0)          # (R, C, d)
+    rows = jnp.take(page_table, seqs, axis=0)              # (R, n_pages)
+    ctx_rows = rows[:, :ctx_pages]
+    kps, vps, kss, vss = [], [], [], []
+    for l in range(n_layers):
+        kn = (x @ params["wk"][l]).reshape(r, c, kvh, hd)
+        vn = (x @ params["wv"][l]).reshape(r, c, kvh, hd)
+        scales = (dict(k_scale=k_scale[l], v_scale=v_scale[l])
+                  if quantized else {})
+        out = kops.paged_kv_write_chunk(
+            k_pages[l], v_pages[l], kn, vn, rows, starts, counts,
+            impl=impl, **scales,
+        )
+        kp, vp = out[0], out[1]
+        ks, vs = (out[2], out[3]) if quantized else (None, None)
+        kps.append(kp)
+        vps.append(vp)
+        kss.append(ks)
+        vss.append(vs)
+        q = (x @ params["wq"][l]).reshape(r, c, h, hd)
+        attn = kops.paged_prefill_attention(
+            q, kp, vp, ctx_rows, starts, counts, k_scale=ks, v_scale=vs,
+            impl=impl,
+        )
+        x = x + attn.astype(x.dtype).reshape(r, c, h * hd) @ params["wo"][l]
+    last = jnp.take_along_axis(
+        x, jnp.clip(counts - 1, 0, c - 1)[:, None, None].astype(jnp.int32),
+        axis=1,
+    )[:, 0]                                                # (R, d)
+    # Advance each real row's slot length in-graph (padding rows dropped).
+    b = lengths.shape[0]
+    new_len = lengths.at[jnp.where(counts > 0, seqs, b)].set(
+        (starts + counts).astype(lengths.dtype), mode="drop"
+    )
+    return (last @ params["embed"].T, jnp.stack(kps), jnp.stack(vps),
+            jnp.stack(kss) if quantized else None,
+            jnp.stack(vss) if quantized else None, new_len)
+
+
+class PagedLM:
+    """Attention-only LM serving straight out of a :class:`PagedKVCache`.
+
+    Deliberately minimal (tied embeddings, no norms/MLP, greedy-friendly
+    float32 math): every per-token computation is row-wise, so a sequence's
+    outputs depend only on its own tokens and pages — the property the
+    scheduler's static-batch equivalence guarantees rest on.  All heavy data
+    movement runs through the packed stream ops: ``paged_kv_append`` /
+    ``paged_kv_write_chunk`` (the indirect write converters) and
+    ``paged_decode_attention`` (the indirect read / scalar-prefetch kernel).
+
+    Every jitted entry point donates the page pools, and the wrappers keep
+    the cache's host shadows (``lengths_host``) in step arithmetically, so
+    calling code never needs to read device state back.
+
+    ``kv_dtype='int8'`` serves from quantized page pools: K/V rows are
+    quantized on write (per-(token, kv-head) scales into the donated scale
+    pools) and both attention kernels dequantize page-by-page in VMEM — the
+    serving analogue of packing narrower elements onto a fixed-width bus
+    (packing factor ``bus/elem``: 8-bit elements quadruple the FP32 factor).
+    The matching cache must be created with the same ``kv_dtype``.
+    """
+
+    #: Max resident jitted prefill programs.  Each distinct ``(page, ctx)``
+    #: bucket mints one program; ragged prompt-length traffic over many page
+    #: sizes would otherwise grow the cache without bound.
+    PREFILL_CACHE_CAP = 8
+
+    def __init__(self, cfg: ArchConfig, key: jax.Array, impl: str = "pallas",
+                 prefill_cache_cap: Optional[int] = None,
+                 kv_dtype: Optional[str] = None):
+        self.cfg = cfg
+        self.impl = impl
+        self.kv_dtype = (
+            PagedKVCache.KV_DTYPES[kv_dtype] if kv_dtype is not None
+            else cfg.compute_dtype
+        )
+        h, kvh = cfg.heads_for_tp(1)
+        self.h, self.kvh, self.hd = h, kvh, cfg.hd
+        d, L = cfg.d_model, cfg.n_layers
+        self.prefill_cache_cap = (
+            self.PREFILL_CACHE_CAP if prefill_cache_cap is None
+            else prefill_cache_cap
+        )
+        # LRU over (page, ctx_pages) buckets: refreshed on hit, evicted
+        # oldest-first past the cap (a re-requested evicted bucket simply
+        # re-jits — correctness never depends on residency).
+        self._prefill_cache: "collections.OrderedDict[Tuple[int, int], Any]" \
+            = collections.OrderedDict()
+        ks = jax.random.split(key, 5)
+        init = lambda k, *s: (jax.random.normal(k, s, jnp.float32)
+                              / np.sqrt(s[-2]))
+        self.params = {
+            "embed": jax.random.normal(ks[0], (cfg.vocab, d), jnp.float32) * 0.02,
+            "wq": init(ks[1], L, d, h * cfg.hd),
+            "wk": init(ks[2], L, d, kvh * cfg.hd),
+            "wv": init(ks[3], L, d, kvh * cfg.hd),
+            "wo": init(ks[4], L, h * cfg.hd, d),
+        }
+
+    def bind(self, cache: PagedKVCache) -> "PagedFamily":
+        """Wrap this model + ``cache`` as the scheduler-facing family."""
+        return PagedFamily(self, cache)
+
+    @functools.cached_property
+    def _decode(self):
+        return jax.jit(functools.partial(
+            _paged_lm_decode_step, h=self.h, kvh=self.kvh, hd=self.hd,
+            impl=self.impl,
+        ), donate_argnums=(2, 3, 4, 5))
+
+    @functools.cached_property
+    def _decode_many(self):
+        return jax.jit(functools.partial(
+            _paged_lm_decode_steps, vocab=self.cfg.vocab, h=self.h,
+            kvh=self.kvh, hd=self.hd, impl=self.impl,
+        ), static_argnames=("n",), donate_argnums=(2, 3, 4, 5))
+
+    def _prefill(self, page: int, ctx_pages: int):
+        return jax.jit(functools.partial(
+            _paged_lm_prefill_batch, h=self.h, kvh=self.kvh, hd=self.hd,
+            page=page, ctx_pages=ctx_pages, impl=self.impl,
+        ), donate_argnums=(5, 6, 7, 8))
+
+    @property
+    def quantized(self) -> bool:
+        return self.kv_dtype == jnp.int8
+
+    @functools.cached_property
+    def kv_token_bytes(self) -> int:
+        """FP32-equivalent bytes per live KV token (K+V, all layers).
+
+        This is the *full-width* footprint — what a packing-oblivious BASE
+        server streams per token regardless of the pool's element width.
+        The packed width is derived from it via :attr:`kv_elem_bits` and
+        :attr:`kv_scale_token_bytes` (see
+        ``repro.core.packing.packed_token_bytes``).
+        """
+        return 2 * self.cfg.n_layers * self.kvh * self.hd * 4
+
+    @functools.cached_property
+    def kv_elem_bits(self) -> int:
+        """Element width of the KV pools on the stream (32/16/8 bits)."""
+        return jnp.dtype(self.kv_dtype).itemsize * 8
+
+    @functools.cached_property
+    def kv_scale_token_bytes(self) -> int:
+        """Sideband scale bytes PACK moves per live KV token (int8 mode).
+
+        One fp32 scale per (token, kv-head) per pool per layer; zero in
+        full-precision modes.
+        """
+        return 2 * self.cfg.n_layers * self.kvh * 4 if self.quantized else 0
+
+    # -- decode --------------------------------------------------------------
+
+    def _shift_lengths(self, cache: PagedKVCache, active, steps: int):
+        if cache.lengths_host is None:
+            return None
+        return (cache.lengths_host
+                + steps * np.asarray(active).astype(np.int32))
+
+    def decode_step(self, tokens, cache: PagedKVCache, active):
+        """One decode step; returns (logits, cache).  Pools are donated —
+        the passed-in cache's device arrays must not be reused."""
+        act_host = np.asarray(active)
+        with _donation_noop_ok():
+            logits, kp, vp, ks, vs, new_len = self._decode(
+                self.params, jnp.asarray(tokens), cache.k_pages,
+                cache.v_pages, cache.k_scale, cache.v_scale,
+                cache.page_table, cache.lengths,
+                jnp.asarray(active),
+            )
+        cache = dataclasses.replace(
+            cache, k_pages=kp, v_pages=vp, k_scale=ks, v_scale=vs,
+            lengths=new_len,
+            lengths_host=self._shift_lengths(cache, act_host, 1),
+        )
+        return logits, cache
+
+    def decode_steps(self, tokens, cache: PagedKVCache, active, n: int):
+        """``n`` fused decode steps with device-side greedy sampling.
+
+        Returns (tokens (n, B) — a *device* array, synced only when the
+        caller reads it — and the updated cache).  Bitwise equivalent to
+        ``n`` sequential ``decode_step`` + host argmax iterations.
+        """
+        act_host = np.asarray(active)
+        with _donation_noop_ok():
+            toks, _, kp, vp, ks, vs, new_len = self._decode_many(
+                self.params, jnp.asarray(tokens), cache.k_pages,
+                cache.v_pages, cache.k_scale, cache.v_scale,
+                cache.page_table, cache.lengths,
+                jnp.asarray(active), n=n,
+            )
+        cache = dataclasses.replace(
+            cache, k_pages=kp, v_pages=vp, k_scale=ks, v_scale=vs,
+            lengths=new_len,
+            lengths_host=self._shift_lengths(cache, act_host, n),
+        )
+        return toks, cache
+
+    def decode_upto(self, tokens, cache: PagedKVCache, active, n: int):
+        """Fused decode of exactly ``n`` steps as a chain of pow2 scans.
+
+        Power-of-two scan lengths keep the jit cache to O(log n) entries
+        while the feed token, pools, and lengths stay on device between
+        chunks; the (n, B) token matrix crosses to the host exactly once,
+        here.  Returns (tokens (n, B) np.ndarray, cache).
+        """
+        act_host = np.asarray(active)
+        act_dev = jnp.asarray(active)
+        feed = jnp.asarray(tokens)
+        kp, vp = cache.k_pages, cache.v_pages
+        ks, vs = cache.k_scale, cache.v_scale
+        lens = cache.lengths
+        parts = []
+        rem = n
+        with _donation_noop_ok():
+            while rem:
+                m = 1 << (rem.bit_length() - 1)
+                toks, feed, kp, vp, ks, vs, lens = self._decode_many(
+                    self.params, feed, kp, vp, ks, vs, cache.page_table,
+                    lens, act_dev, n=m,
+                )
+                parts.append(toks)
+                rem -= m
+        out = np.concatenate([np.asarray(t) for t in parts], axis=0)  # sync
+        cache = dataclasses.replace(
+            cache, k_pages=kp, v_pages=vp, k_scale=ks, v_scale=vs,
+            lengths=lens,
+            lengths_host=self._shift_lengths(cache, act_host, n),
+        )
+        return out, cache
+
+    # -- prefill -------------------------------------------------------------
+
+    def prefill_batch(self, tokens: np.ndarray, counts: np.ndarray,
+                      slots: np.ndarray, starts: np.ndarray,
+                      cache: PagedKVCache):
+        """Advance all pending sequences by one chunk; returns (logits, cache).
+
+        tokens (R, C) int32; counts/slots/starts (R,) host arrays.  Rows
+        with ``counts == 0`` are padding.  The attention context is bounded
+        by the mapped pages the furthest row needs, bucketed to the next
+        power of two so the jit cache stays small.
+        """
+        counts = np.asarray(counts, np.int32)
+        starts = np.asarray(starts, np.int32)
+        slots = np.asarray(slots, np.int32)
+        page = cache.page_size
+        need = int(max(1, -(-int((starts + counts).max()) // page)))
+        ctx = 1
+        while ctx < need:
+            ctx *= 2
+        ctx = min(ctx, cache.pages_per_seq)
+        key = (page, ctx)
+        fn = self._prefill_cache.get(key)
+        if fn is None:
+            fn = self._prefill_cache[key] = self._prefill(page, ctx)
+            while len(self._prefill_cache) > self.prefill_cache_cap:
+                self._prefill_cache.popitem(last=False)
+        else:
+            self._prefill_cache.move_to_end(key)
+        with _donation_noop_ok():
+            logits, kp, vp, ks, vs, new_len = fn(
+                self.params, jnp.asarray(tokens), jnp.asarray(counts),
+                jnp.asarray(slots), jnp.asarray(starts),
+                cache.k_pages, cache.v_pages, cache.k_scale, cache.v_scale,
+                cache.page_table, cache.lengths,
+            )
+        real = counts > 0
+        lens_host = cache.lengths_host
+        if lens_host is not None:
+            lens_host = lens_host.copy()
+            lens_host[slots[real]] = (starts + counts)[real]
+        cache = dataclasses.replace(
+            cache, k_pages=kp, v_pages=vp, k_scale=ks, v_scale=vs,
+            lengths=new_len, lengths_host=lens_host,
+        )
+        return logits, cache
+
+    def prefill_chunk(self, tokens, count: int, seq: int, start: int,
+                      cache: PagedKVCache):
+        """Single-sequence chunked prefill (the R=1 row of the batched path)."""
+        logits, cache = self.prefill_batch(
+            np.asarray(tokens, np.int32)[None, :],
+            np.asarray([count], np.int32),
+            np.asarray([seq], np.int32),
+            np.asarray([start], np.int32),
+            cache,
+        )
+        return logits[0], cache
+
+
+class PagedFamily(ServableFamily):
+    """:class:`ServableFamily` over a :class:`PagedLM` + :class:`PagedKVCache`.
+
+    Resource units are physical pages; traffic accounting is the indirect
+    dialect (``page_table_streams`` / ``paged_decode_traffic`` — the page
+    table as a memory-resident index vector).  Every method delegates to
+    the exact calls the scheduler used to make directly, with identical
+    argument values, so PagedLM serving output and Traffic/stream records
+    are bit-for-bit unchanged by the protocol indirection.
+
+    The family is the *stateful* face of the functional cache: pool-mutating
+    methods rebind ``self.cache`` to the returned cache, and the scheduler
+    only ever reads the pool through the family (or its ``Scheduler.cache``
+    compatibility property).
+    """
+
+    name = "paged"
+
+    def __init__(self, model: PagedLM, cache: PagedKVCache):
+        # Element width drives the traffic accounting AND the math the model
+        # runs, so any model/cache width mismatch (not just int8-vs-float)
+        # must fail loudly rather than mis-report PACK bytes.
+        if jnp.dtype(model.kv_dtype) != jnp.dtype(cache.k_pages.dtype):
+            raise ValueError(
+                f"model kv_dtype ({jnp.dtype(model.kv_dtype).name}) does not "
+                f"match the cache pool dtype ({cache.k_pages.dtype.name}): "
+                "create both with the same kv_dtype"
+            )
+        self.model = model
+        self.cache = cache
+
+    # -- geometry -----------------------------------------------------------
+
+    @property
+    def batch(self) -> int:
+        return self.cache.page_table.shape[0]
+
+    @property
+    def vocab(self) -> int:
+        return self.model.cfg.vocab
+
+    @property
+    def total_units(self) -> int:
+        return self.cache.total_pages
+
+    @property
+    def free_units(self) -> int:
+        return self.cache.n_free
+
+    @property
+    def slot_token_capacity(self) -> int:
+        return self.cache.pages_per_seq * self.cache.page_size
+
+    @property
+    def page_size(self) -> int:
+        return self.cache.page_size
+
+    @property
+    def pool_bytes(self) -> int:
+        return self.cache.pool_bytes
+
+    def units_for(self, n_tokens: int) -> int:
+        return self.cache.pages_for(n_tokens)
+
+    def mapped_units(self, slot: int) -> int:
+        return self.cache._mapped(slot)
+
+    def token_capacity(self, slot: int) -> int:
+        return self.cache._mapped(slot) * self.cache.page_size
+
+    def state_bytes(self, n_tokens: int) -> int:
+        return n_tokens * self.model.kv_token_bytes
+
+    def lengths(self) -> np.ndarray:
+        if self.cache.lengths_host is not None:
+            return self.cache.lengths_host
+        return np.asarray(self.cache.lengths)
+
+    def _host_table(self) -> np.ndarray:
+        if self.cache.page_table_host is not None:
+            return self.cache.page_table_host
+        return np.asarray(self.cache.page_table)
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def alloc_state(self, slot: int, units: int) -> None:
+        self.cache = self.cache.allocate(slot, units)
+
+    def trim(self, slot: int, keep_units: int) -> None:
+        self.cache = self.cache.trim(slot, keep_units)
+
+    def release(self, slot: int) -> None:
+        self.cache = self.cache.release(slot)
+
+    # replay(): inherited no-op — freshly allocated pages hold no live KV,
+    # so re-prefill after eviction rebuilds the slot from nothing already.
+
+    # -- model compute ------------------------------------------------------
+
+    def prefill_batch(self, tokens, counts, slots, starts):
+        logits, self.cache = self.model.prefill_batch(
+            tokens, counts, slots, starts, self.cache
+        )
+        return logits
+
+    def decode_steps(self, tokens, active, n: int) -> np.ndarray:
+        out, self.cache = self.model.decode_upto(
+            tokens, self.cache, active, n
+        )
+        return out
+
+    # -- traffic accounting -------------------------------------------------
+
+    def step_streams(self, active, n: int) -> List[Tuple[Traffic, tuple]]:
+        """Per-step indirect accounting for the next ``n`` fused decode
+        steps, from the same host shadows the old scheduler read: the
+        page-table snapshot before the launch and ``lens0 + s + 1`` per
+        step ``s``."""
+        b = self.batch
+        lens0 = self.lengths().copy()
+        table = np.array(self._host_table())
+        slots = np.nonzero(np.asarray(active))[0]
+        accounts: List[Tuple[Traffic, tuple]] = []
+        for s in range(n):
+            step_lens = np.zeros((b,), np.int64)
+            for slot in slots:
+                step_lens[slot] = int(lens0[slot]) + s + 1
+            streams = page_table_streams(
+                table, step_lens,
+                self.cache.page_size, self.model.kv_token_bytes,
+                kv_elem_bits=self.model.kv_elem_bits,
+                scale_bytes_per_token=self.model.kv_scale_token_bytes,
+            )
+            traffic = paged_decode_traffic(
+                step_lens[step_lens > 0], self.cache.page_size,
+                self.cache.pages_per_seq, self.model.kv_token_bytes,
+                elem_bits=self.model.kv_elem_bits,
+                scale_bytes_per_token=self.model.kv_scale_token_bytes,
+            )
+            accounts.append((traffic, streams))
+        return accounts
+
+    def prefill_account(self, slots, starts, counts) -> Tuple[Traffic, tuple]:
+        table = self._host_table()
+        traffic = paged_prefill_traffic(
+            starts, counts,
+            self.cache.page_size, self.cache.pages_per_seq,
+            self.model.kv_token_bytes,
+            elem_bits=self.model.kv_elem_bits,
+            scale_bytes_per_token=self.model.kv_scale_token_bytes,
+        )
+        streams = prefill_table_streams(
+            table[slots],  # fancy indexing: bounded per-row copy
+            starts, counts,
+            self.cache.page_size, self.model.kv_token_bytes,
+            kv_elem_bits=self.model.kv_elem_bits,
+            scale_bytes_per_token=self.model.kv_scale_token_bytes,
+        )
+        return traffic, streams
+
+    # -- prefix sharing -----------------------------------------------------
+
+    @property
+    def supports_prefix_sharing(self) -> bool:
+        return self.cache.refcounts is not None
+
+    def share(self, slot: int, unit_ids: List[int]) -> None:
+        self.cache = self.cache.share(slot, unit_ids)
+
+    def retain_units(self, unit_ids: List[int]) -> None:
+        self.cache = self.cache.retain_pages(unit_ids)
+
+    def release_units(self, unit_ids: List[int]) -> None:
+        self.cache = self.cache.release_pages(unit_ids)
+
+    def unit_refcount(self, unit_id: int) -> int:
+        return int(self.cache.refcounts[unit_id])
+
+    def slot_unit_ids(self, slot: int) -> List[int]:
+        row = self._host_table()[slot]
+        return [int(p) for p in row[: self.cache._mapped(slot)]]
+
+    def ensure_writable(self, slot: int, lo_token: int,
+                        hi_token: int) -> int:
+        self.cache, n_cow = self.cache.ensure_writable(
+            slot, lo_token, hi_token
+        )
+        return n_cow
+
+    def share_account(self, shared_tokens: int,
+                      unit_ids: Sequence[int]) -> Tuple[Traffic, tuple]:
+        page = self.cache.page_size
+        traffic = prefix_share_traffic(
+            shared_tokens, len(unit_ids), page,
+            self.model.kv_token_bytes,
+            elem_bits=self.model.kv_elem_bits,
+            scale_bytes_per_token=self.model.kv_scale_token_bytes,
+        )
+        streams = share_table_streams(
+            unit_ids, page, self.model.kv_token_bytes,
+            kv_elem_bits=self.model.kv_elem_bits,
+            scale_bytes_per_token=self.model.kv_scale_token_bytes,
+        )
+        return traffic, streams
+
+    # -- invariants ---------------------------------------------------------
+
+    def check_integrity(self, retained: int = 0) -> None:
+        self.cache.check_integrity(retained=retained)
+
+
+def static_batch_generate(
+    model: PagedLM,
+    cache: PagedKVCache,
+    prompts: Sequence[np.ndarray],
+    max_new: int,
+    chunk: int = 8,
+) -> Dict[int, List[int]]:
+    """Reference: all prompts prefilled up front, then one static decode batch.
+
+    Uses the same jitted single-step prefill/decode building blocks the
+    scheduler's fused fast path is made of (one-row ``prefill_batch`` calls,
+    ``decode_step`` with host-side argmax), so scheduled continuous batching
+    must reproduce these tokens bit-for-bit (asserted in
+    tests/test_scheduler.py).  Requires a pool large enough to hold every
+    sequence at once.
+    """
+    b = cache.page_table.shape[0]
+    assert len(prompts) <= b, "static batch needs one slot per prompt"
+    out: Dict[int, List[int]] = {}
+    for i, prompt in enumerate(prompts):
+        cache = cache.allocate(i, cache.pages_for(len(prompt) + max_new))
+        toks: List[int] = []
+        for start in range(0, len(prompt), chunk):
+            count = min(chunk, len(prompt) - start)
+            buf = np.zeros((chunk,), np.int32)
+            buf[:count] = np.asarray(prompt)[start:start + count]
+            logits, cache = model.prefill_chunk(
+                jnp.asarray(buf), count, i, start, cache
+            )
+        toks.append(int(np.argmax(np.asarray(logits)[: model.cfg.vocab])))
+        out[i] = toks
+    for _ in range(max_new - 1):
+        tokens = np.zeros((b,), np.int32)
+        active = np.zeros((b,), bool)
+        for i in range(len(prompts)):
+            tokens[i] = out[i][-1]
+            active[i] = True
+        logits, cache = model.decode_step(
+            jnp.asarray(tokens), cache, jnp.asarray(active)
+        )
+        nxt = np.argmax(np.asarray(logits)[:, : model.cfg.vocab], axis=-1)
+        for i in range(len(prompts)):
+            out[i].append(int(nxt[i]))
+    return out

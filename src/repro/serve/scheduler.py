@@ -1,31 +1,41 @@
-"""Continuous-batching request scheduler over paged AXI-Pack streams.
+"""Continuous-batching request scheduler over AXI-Pack stream families.
 
-The serving-side payoff of the paper's indirect streams: a fixed physical
-page pool, per-sequence page tables as memory-resident index vectors, and a
-scheduler that keeps the pool full of *useful* pages.  Requests of arbitrary
-length enter and leave mid-flight; every decode step is one batched
-``paged_decode_attention`` launch whose operands — and whose BASE-vs-PACK
-traffic accounting — are derived from the same
-:func:`repro.core.streams.page_table_streams` descriptors.
+The serving-side payoff of the paper's irregular streams: a fixed physical
+resource pool, per-sequence descriptors as memory-resident index vectors,
+and a scheduler that keeps the pool full of *useful* state.  Requests of
+arbitrary length enter and leave mid-flight; every decode step is one
+batched fused launch whose operands — and whose BASE-vs-PACK traffic
+accounting — come from the family's own stream descriptors.
+
+The scheduler is **family-agnostic**: it drives exactly one
+:class:`repro.serve.family.ServableFamily` and speaks only the protocol —
+resource *units* (pages for paged attention, state slots for recurrent
+models), ``prefill_batch``/``decode_steps`` for compute,
+``step_streams``/``prefill_account`` for accounting, and
+``alloc_state``/``grow``/``release``/``replay`` for the lifecycle.  No
+``isinstance`` check or KV-specific attribute appears below; the paged
+transformer path (``repro.serve.paged_lm.PagedFamily``, indirect page-walk
+streams) and the recurrent path (``repro.serve.recurrent_lm``, strided
+state streams) run through the same code.
 
 Scheduling policy (vLLM-shaped, deliberately simple and deterministic):
 
 * **Admission** — priority/deadline ordered.  The queue sorts by
   ``(priority desc, absolute deadline asc, submission order)``; with the
   defaults (priority 0, no deadline) this is exactly FIFO.  The head of the
-  queue is admitted when a batch slot is free and the pool holds pages for
-  its whole prompt plus one decode page of headroom (head-of-line blocking
+  queue is admitted when a batch slot is free and the pool holds units for
+  its whole prompt plus one decode unit of headroom (head-of-line blocking
   is deliberate: it keeps admission deterministic and starvation-free).
-  Prompt pages are allocated at admission; decode pages on demand.
-  Requests that can *never* be served — worst-case pages exceed the pool,
-  or the prompt+generation exceeds the per-sequence table row — are
+  Prompt units are allocated at admission; decode units on demand.
+  Requests that can *never* be served — worst-case units exceed the pool,
+  or the prompt+generation exceeds the per-slot token capacity — are
   rejected at ``submit()`` with a typed, non-fatal :class:`RequestRejected`
   (reason ``NEVER_FITS``); a ``deadline_steps`` too tight to ever meet is
   rejected as ``DEADLINE_INFEASIBLE``; and a queued request whose deadline
   expires while the pool is busy is rejected as ``POOL_BUSY`` instead of
   being served late.  Rejection is a terminal state (``rejected``) tracked
   next to ``finished`` — it never poisons the scheduler.
-* **Preemption** — when page growth or admission hits pool exhaustion the
+* **Preemption** — when unit growth or admission hits pool exhaustion the
   scheduler evicts the resident with the *lowest priority*, tie-broken by
   the cheapest replay cost (prompt + generated tokens — exactly the work
   replay must redo), then by youth.  Each eviction charges the victim's
@@ -34,53 +44,55 @@ Scheduling policy (vLLM-shaped, deliberately simple and deterministic):
   output retained in ``generated``) instead of re-entering the queue.
 * **Fault injection** — an optional :class:`repro.serve.faults.FaultPlan`
   drives chaos testing: forced pool exhaustion (admission/growth see zero
-  free pages), denied allocations (growth defers the starved request a
+  free units), denied allocations (growth defers the starved request a
   step), prefix-index drops, and injected step latency fed to an optional
   ``StragglerWatchdog``.  Faults reroute through the same degradation
   ladder as real pressure — reclaim lookahead → drop retained prefixes →
-  evict/preempt — and never raise out of ``run()``.
+  evict/preempt — and never raise out of ``run()``.  A fault action the
+  family cannot express (a prefix drop against a family with no prefix
+  index) no-ops with a counted skip (``stats.n_prefix_drop_skips``).
 * **Prefill** — chunked and batched: each scheduler step advances *every*
-  pending request by one fixed-size chunk in a single
-  ``PagedLM.prefill_batch`` call, interleaved with decode (prefill never
-  starves decode and vice versa).  Each prefill step records its
-  :func:`repro.core.streams.prefill_table_streams` descriptors (context
-  read + chunk write per row) and ``paged_prefill_traffic`` the way decode
-  steps already record theirs.
+  pending request by one fixed-size chunk in a single family
+  ``prefill_batch`` call, interleaved with decode (prefill never starves
+  decode and vice versa).  Each prefill step records the family's
+  ``prefill_account`` descriptors the way decode steps record theirs.
 * **Decode fast path** — between scheduling boundaries (admission, prefill,
-  page growth, retirement) every decode quantity is known on the host, so
-  the scheduler *fuses* all steps up to the next boundary into device-
-  resident ``PagedLM.decode_steps`` launches (greedy sampling on device,
-  pools donated in place) and syncs the token matrix back exactly once per
-  boundary.  When nothing can be admitted or prefilled first, pages for
-  each request's remaining generation are preallocated from the free pool
-  (lookahead never evicts), so page growth stops being a boundary.
-  Per-step ``page_table_streams``/``paged_decode_traffic`` records are
-  reconstructed from host-side shadow lengths, so the PACK-vs-BASE
+  unit growth, retirement) every decode quantity is known on the host, so
+  the scheduler *fuses* all steps up to the next boundary into one
+  ``decode_steps`` call (device-resident sampling, pools donated in place)
+  and syncs the token matrix back exactly once per boundary.  When nothing
+  can be admitted or prefilled first, units for each request's remaining
+  generation are preallocated from the free pool (lookahead never evicts),
+  so growth stops being a boundary.  Per-step records come from the
+  family's ``step_streams`` (host shadows only), so the PACK-vs-BASE
   accounting is unchanged from the step-at-a-time path.
-* **Eviction** — when a decode step needs a page and the pool is empty, the
-  *youngest* resident request is preempted: its pages return to the pool and
-  it re-enters the queue front.  On re-admission its prompt is re-prefilled
-  and its previously generated tokens are *replayed through the decode
-  path* (outputs discarded), which rebuilds its KV bit-for-bit — so
+* **Eviction** — when a decode step needs a unit and the pool is empty, the
+  *youngest* resident request is preempted: its units return to the pool and
+  it re-enters the queue front.  On re-admission ``replay(slot)`` resets
+  the slot to what a fresh prefill assumes (a no-op for paged families;
+  zeroed state rows for recurrent ones), its prompt is re-prefilled, and
+  its previously generated tokens are *replayed through the decode path*
+  (outputs discarded), which rebuilds its serving state bit-for-bit — so
   eviction is invisible in the output stream.  Replay inputs are forced
   from the recorded tokens at every fused-launch boundary; *within* a
   fused launch the device feeds its own greedy argmax, which matches the
   recorded tokens because the model is deterministic and row-wise (the
   property the equivalence tests assert) — a future nondeterministic
   kernel would have to cap fusion during replay.
-* **Prefix sharing** (opt-in, ``prefix_sharing=True``) — a
-  :class:`PrefixIndex` maps page-aligned prompt chunks to the physical
-  pages that hold them.  Admission looks the new prompt up and maps every
-  matched page by refcount bump (``PagedKVCache.share``), prefilling only
-  the divergent tail; completed prefills register their full prompt pages,
-  and retired requests' pages are *retained* by the index (LRU) so later
+* **Prefix sharing** (opt-in, ``prefix_sharing=True``; requires
+  ``family.supports_prefix_sharing`` — token-granular refcounted units) —
+  a :class:`PrefixIndex` maps page-aligned prompt chunks to the physical
+  units that hold them.  Admission looks the new prompt up and maps every
+  matched unit by refcount bump (``family.share``), prefilling only the
+  divergent tail; completed prefills register their full prompt units, and
+  retired requests' units are *retained* by the index (LRU) so later
   requests on the same system prompt hit the pool without it being
-  resident.  Writes never land in a shared page: admission privatizes the
-  boundary page up front via copy-on-write (``ensure_writable``), and the
+  resident.  Writes never land in a shared unit: admission privatizes the
+  boundary unit up front via copy-on-write (``ensure_writable``), and the
   prefill/decode paths carry the same guard defensively.  Under pool
-  pressure retained pages are dropped LRU-first before any resident is
+  pressure retained units are dropped LRU-first before any resident is
   evicted; eviction/replay re-derives shared mappings through the same
-  lookup, so replay stays bit-for-bit (shared pages are reused, never
+  lookup, so replay stays bit-for-bit (shared units are reused, never
   re-quantized differently in int8 mode).  Admission briefly *defers* a
   request whose prefix is still being prefilled by a resident sibling, so
   concurrent arrivals with one system prompt share it instead of each
@@ -88,13 +100,13 @@ Scheduling policy (vLLM-shaped, deliberately simple and deterministic):
 * **Hooks** — ``on_token(request, token)`` streams each newly generated
   token; ``on_finish(request)`` fires at completion.
 
-Every decode step records a :class:`repro.core.packing.Traffic`: BASE is the
-padded contiguous cache a packing-oblivious server would stream, PACK is the
-mapped pages plus the near-memory page-table fetch — connecting serving
-throughput back to the Fig. 3 bus model.  Under int8 page pools
-(``kv_dtype='int8'`` on both the model and cache) the records carry the
-8-bit element width, so PACK shows the quadrupled packing factor while
-BASE keeps full-width slots (the narrow-beat penalty).
+Every decode step records a :class:`repro.core.packing.Traffic`: BASE is
+the padded contiguous state a packing-oblivious server would stream, PACK
+is the mapped units plus the near-memory descriptor fetch — connecting
+serving throughput back to the Fig. 3 bus model.  The stream dialect is
+the family's: :class:`repro.core.streams.IndirectStream` page walks for
+paged KV (8-bit element width under int8 pools), strided read-modify-write
+:class:`repro.core.streams.StridedStream` pairs for recurrent state.
 """
 from __future__ import annotations
 
@@ -107,22 +119,10 @@ from typing import (
     Tuple,
 )
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.packing import (
-    Traffic,
-    paged_decode_traffic,
-    paged_prefill_traffic,
-    prefix_share_traffic,
-)
-from repro.core.streams import (
-    IndirectStream,
-    page_table_streams,
-    prefill_table_streams,
-    share_table_streams,
-)
-from .engine import OutOfPages, PagedKVCache, PagedLM
+from repro.core.packing import Traffic
+from .family import ServableFamily
 from .faults import FaultPlan
 
 __all__ = [
@@ -136,16 +136,15 @@ __all__ = [
     "StepRecord",
     "ServeStats",
     "build_prefill_rows",
-    "static_batch_generate",
 ]
 
 
 class RejectReason(enum.Enum):
     """Why a request was rejected instead of served.
 
-    * ``NEVER_FITS`` — the request's worst-case page demand exceeds the
-      pool, or its prompt+generation exceeds the per-sequence table row; no
-      amount of waiting can serve it.
+    * ``NEVER_FITS`` — the request's worst-case unit demand exceeds the
+      pool, or its prompt+generation exceeds the per-slot token capacity;
+      no amount of waiting can serve it.
     * ``POOL_BUSY`` — the request has a deadline, and by the time the busy
       pool could admit it the deadline can no longer be met.  With no
       deadline a request waits indefinitely instead.
@@ -180,14 +179,14 @@ class SchedulerStalledError(RuntimeError):
     """``run()`` hit ``max_steps`` with work still pending.
 
     The message carries a full diagnostic dump — queue depth, free
-    pages/slots, and per-request state (rid, state, slot, prefill position,
+    units/slots, and per-request state (rid, state, slot, prefill position,
     generated count, KV length, priority) — so a stall names the stuck
     request instead of leaving a context-free failure.
     """
 
 
 class PrefixIndex:
-    """Prompt-prefix → physical-page index over page-aligned token chunks.
+    """Prompt-prefix → physical-unit index over page-aligned token chunks.
 
     Entry ``k`` of a prompt is keyed by the byte string of its first
     ``(k+1)·page`` tokens and maps to the physical page holding tokens
@@ -197,9 +196,10 @@ class PrefixIndex:
     a lookup walk needs no verification pass and cannot alias.
 
     The index holds one refcount owner per registered page
-    (``PagedKVCache.retain_pages``), which is what keeps a retired prompt's
+    (``family.retain_units``), which is what keeps a retired prompt's
     prefix resident.  Entries are LRU-ordered; the scheduler drops them
-    oldest-first under pool pressure.
+    oldest-first under pool pressure.  Only meaningful for families with
+    token-granular refcounted units (``supports_prefix_sharing``).
     """
 
     def __init__(self, page_size: int):
@@ -393,14 +393,19 @@ class Request:
 
 @dataclasses.dataclass
 class StepRecord:
-    """Per-model-step accounting (a fused launch emits one record per step)."""
+    """Per-model-step accounting (a fused launch emits one record per step).
+
+    ``streams`` holds the family's descriptor dialect —
+    ``IndirectStream`` page walks for paged KV, ``StridedStream``
+    read-modify-write pairs for recurrent state.
+    """
 
     step: int
     kind: str                 # 'decode' | 'prefill' | 'share'
     n_active: int
     new_tokens: int
     traffic: Optional[Traffic]
-    streams: Tuple[IndirectStream, ...] = ()
+    streams: Tuple[Any, ...] = ()
 
 
 @dataclasses.dataclass
@@ -416,6 +421,7 @@ class ServeStats:
     deadline_misses: int = 0        # deadline requests rejected or late
     n_stragglers: int = 0           # watchdog-flagged slow steps
     n_prefix_drops: int = 0         # fault-injected prefix-index drops
+    n_prefix_drop_skips: int = 0    # prefix-drop faults skipped (no index)
 
     @property
     def decode_steps(self) -> int:
@@ -527,28 +533,38 @@ class ServeStats:
 
 
 class Scheduler:
-    """Continuous-batching scheduler driving a :class:`PagedLM`."""
+    """Continuous-batching scheduler driving one :class:`ServableFamily`.
 
-    def __init__(self, model: PagedLM, cache: PagedKVCache, chunk: int = 8,
+    ``Scheduler(model, cache)`` binds the model to its resource pool via
+    ``model.bind(cache)`` (every engine exposes it), so existing call
+    sites keep working; an already-bound family can be passed directly as
+    ``Scheduler(family)``.  The scheduler itself speaks only the protocol.
+    """
+
+    def __init__(self, model: Any, cache: Any = None, chunk: int = 8,
                  prefix_sharing: bool = False,
                  faults: Optional[FaultPlan] = None,
                  watchdog: Optional[Any] = None):
-        # Element width drives the traffic accounting AND the math the model
-        # runs, so any model/cache width mismatch (not just int8-vs-float)
-        # must fail loudly rather than mis-report PACK bytes.
-        if jnp.dtype(model.kv_dtype) != jnp.dtype(cache.k_pages.dtype):
-            raise ValueError(
-                f"model kv_dtype ({jnp.dtype(model.kv_dtype).name}) does not "
-                f"match the cache pool dtype ({cache.k_pages.dtype.name}): "
-                "create both with the same kv_dtype"
+        if cache is not None:
+            # May raise (e.g. the paged family's kv_dtype agreement check)
+            # — binding validates model/pool compatibility.
+            family: ServableFamily = model.bind(cache)
+        elif isinstance(model, ServableFamily):
+            family = model
+        else:
+            raise TypeError(
+                "Scheduler needs a ServableFamily, or a model plus the "
+                "cache/pool to bind one"
             )
-        if prefix_sharing and cache.refcounts is None:
+        if prefix_sharing and not family.supports_prefix_sharing:
             raise ValueError("prefix_sharing requires a refcounted cache")
-        self.model = model
-        self.cache = cache
+        self.family = family
+        #: The family's underlying model (compat accessor; never used by
+        #: scheduling logic).
+        self.model = getattr(family, "model", model)
         self.chunk = chunk
         self.prefix_index: Optional[PrefixIndex] = (
-            PrefixIndex(cache.page_size) if prefix_sharing else None
+            PrefixIndex(family.page_size) if prefix_sharing else None
         )
         #: Injected fault schedule (chaos testing); None = fault-free.
         self.faults = faults
@@ -565,7 +581,16 @@ class Scheduler:
         self._step = 0
         self._admit_counter = 0
         self._submit_counter = 0
-        self._free_slots = list(range(cache.page_table.shape[0]))[::-1]
+        self._free_slots = list(range(family.batch))[::-1]
+
+    @property
+    def cache(self):
+        """The family's underlying resource pool (page pool / state pool).
+
+        Compatibility accessor for tests, benchmarks, and diagnostics; the
+        scheduling logic itself never reaches through it.
+        """
+        return getattr(self.family, "cache", None)
 
     # -- public API ---------------------------------------------------------
 
@@ -628,20 +653,19 @@ class Scheduler:
                 f"request {request.rid}: max_new must be >= 1"
             )
         request.submit_step = self._step
-        worst = self.cache.pages_for(self._max_kv(request))
-        if worst > self.cache.total_pages:
+        worst = self.family.units_for(self._max_kv(request))
+        if worst > self.family.total_units:
             return self._reject(
                 request, RejectReason.NEVER_FITS,
                 f"needs up to {worst} pages; the pool holds "
-                f"{self.cache.total_pages}", strict,
+                f"{self.family.total_units}", strict,
             )
-        if self._max_kv(request) > (
-            self.cache.pages_per_seq * self.cache.page_size
-        ):
+        if self._max_kv(request) > self.family.slot_token_capacity:
             return self._reject(
                 request, RejectReason.NEVER_FITS,
                 f"prompt+generation ({self._max_kv(request)} tokens) exceeds "
-                f"the {self.cache.pages_per_seq}-page table row", strict,
+                f"the {self.family.slot_token_capacity}-token slot capacity",
+                strict,
             )
         if (request.deadline_steps is not None
                 and request.deadline_steps < self._min_steps(request)):
@@ -663,7 +687,7 @@ class Scheduler:
         lines = [
             f"scheduler stalled after {max_steps} steps: "
             f"{len(self.queue)} queued, {len(self.resident)} resident, "
-            f"{self.cache.n_free}/{self.cache.total_pages} pages free, "
+            f"{self.family.free_units}/{self.family.total_units} pages free, "
             f"{len(self._free_slots)} slots free",
         ]
         for r in list(self.resident) + list(self.queue):
@@ -701,9 +725,13 @@ class Scheduler:
         watchdog."""
         self._step += 1
         t0 = time.perf_counter()
-        if (self.faults is not None and self.prefix_index is not None
-                and self.faults.drop_prefix(self._step)):
-            self._drop_prefix_fault()
+        if self.faults is not None and self.faults.drop_prefix(self._step):
+            if self.prefix_index is None:
+                # The fault action doesn't apply to this family/config (no
+                # prefix index to drop): counted no-op, never a raise.
+                self.stats.n_prefix_drop_skips += 1
+            else:
+                self._drop_prefix_fault()
         self._expire_deadlines()
         self._admit()
         self._prefill_all()
@@ -719,29 +747,16 @@ class Scheduler:
     # -- fault hooks ---------------------------------------------------------
 
     def _effective_free(self) -> int:
-        """Free pages as scheduling policy sees them: zero while a forced
+        """Free units as scheduling policy sees them: zero while a forced
         pool-exhaustion fault is active (the physical free list is
         untouched — CoW and already-checked admissions still succeed)."""
         if self.faults is not None and self.faults.exhaust(self._step):
             return 0
-        return self.cache.n_free
+        return self.family.free_units
 
     def _alloc_denied(self) -> bool:
         return (self.faults is not None
                 and self.faults.deny_alloc(self._step))
-
-    def _try_allocate(self, slot: int, n: int) -> bool:
-        """Allocate ``n`` pages for ``slot``; ``False`` instead of raising.
-
-        ``PagedKVCache.allocate`` is functional — on failure nothing was
-        committed, so the free/mapped/refcount partition is untouched and
-        the caller can simply defer (the crash-consistency guarantee the
-        chaos suite asserts via ``check_integrity``)."""
-        try:
-            self.cache = self.cache.allocate(slot, n)
-            return True
-        except OutOfPages:
-            return False
 
     def _drop_prefix_fault(self) -> None:
         """Fault: drop one seeded-random retained prefix chain.  Sharing is
@@ -753,7 +768,7 @@ class Scheduler:
         rng = np.random.default_rng([self.faults.seed, self._step])
         key = entries[int(rng.integers(len(entries)))]
         pages = self.prefix_index.pop_chain(key)
-        self.cache = self.cache.release_pages(pages)
+        self.family.release_units(pages)
         self.stats.n_prefix_drops += 1
 
     def _expire_deadlines(self) -> None:
@@ -764,7 +779,7 @@ class Scheduler:
         request is rejected as POOL_BUSY rather than served late.  Resident
         requests are never killed by a deadline — they finish and count a
         deadline miss instead (killing mid-flight work would waste the
-        pages it already filled).
+        units it already filled).
         """
         expired = [
             r for r in self.queue
@@ -782,32 +797,28 @@ class Scheduler:
     # -- host shadow state ---------------------------------------------------
 
     def _lengths(self) -> np.ndarray:
-        """Per-slot KV lengths without touching the device."""
-        if self.cache.lengths_host is not None:
-            return self.cache.lengths_host
-        return np.asarray(self.cache.lengths)
+        """Per-slot token lengths (family host shadow; no device sync)."""
+        return self.family.lengths()
 
     # -- admission ----------------------------------------------------------
 
     def _reclaim_lookahead(self, need: int) -> None:
-        """Trim residents' unwritten lookahead pages back to the free pool.
+        """Trim residents' unwritten lookahead units back to the free pool.
 
-        Lookahead prealloc (see ``_grow_pages``) may have mapped pages for
-        generations that have not happened yet; those pages hold no KV, so
-        reclaiming them for an admission is loss-free — the residents simply
-        fall back to on-demand growth.  Trims youngest-first, down to each
-        request's written content (prompt pages for a request still in
-        prefill)."""
+        Lookahead prealloc (see ``_grow_units``) may have mapped units for
+        generations that have not happened yet; those units hold no state,
+        so reclaiming them for an admission is loss-free — the residents
+        simply fall back to on-demand growth.  Trims youngest-first, down
+        to each request's written content (prompt units for a request
+        still in prefill)."""
         for r in sorted(self.resident, key=lambda x: -x.admit_order):
             if self._effective_free() >= need:
                 return
             if r.state is RequestState.PREFILL:
-                floor = self.cache.pages_for(r.prompt_len)
+                floor = self.family.units_for(r.prompt_len)
             else:
-                floor = self.cache.pages_for(
-                    int(self._lengths()[r.slot])
-                )
-            self.cache = self.cache.trim(r.slot, floor)
+                floor = self.family.units_for(int(self._lengths()[r.slot]))
+            self.family.trim(r.slot, floor)
 
     def _drop_retained(self, need: int,
                        keep: FrozenSet[bytes] = frozenset()) -> None:
@@ -826,16 +837,16 @@ class Scheduler:
             if key not in self.prefix_index.entries or key in keep:
                 continue  # already popped as part of an earlier chain
             page_id = self.prefix_index.entries[key]
-            if self.cache.refcounts[page_id] > 1:
+            if self.family.unit_refcount(page_id) > 1:
                 continue
             pages = self.prefix_index.pop_chain(key, keep=keep)
-            self.cache = self.cache.release_pages(pages)
+            self.family.release_units(pages)
 
     def flush_prefix_cache(self) -> None:
         """Drop every retained prefix entry; unshared pages return to free."""
         if self.prefix_index is None:
             return
-        self.cache = self.cache.release_pages(self.prefix_index.pop_all())
+        self.family.release_units(self.prefix_index.pop_all())
 
     def _defer_for_inflight_prefix(self, r: Request) -> bool:
         """Hold admission while a still-prefilling resident is building a
@@ -850,7 +861,7 @@ class Scheduler:
         defer condition vanishes).
         """
         assert self.prefix_index is not None
-        page = self.cache.page_size
+        page = self.family.page_size
         pr = np.asarray(r.prompt, dtype=np.int64)
         have = self.prefix_index.match_len(r.prompt)
         for s in self.resident:
@@ -874,19 +885,19 @@ class Scheduler:
                 if self._defer_for_inflight_prefix(r):
                     return
                 shared = self.prefix_index.lookup(r.prompt)
-            page = self.cache.page_size
+            page = self.family.page_size
             shared_tokens = len(shared) * page
             # Admission always (re-)prefills at least the prompt's last
             # token, so completing prefill yields fresh last-token logits.
             # A fully page-aligned match therefore writes one token into
             # its final *shared* page — privatized eagerly below via
-            # copy-on-write, with the extra page counted in ``need`` so two
-            # same-step admissions can't both claim the same free page.
+            # copy-on-write, with the extra unit counted in ``need`` so two
+            # same-step admissions can't both claim the same free unit.
             tail_start = min(shared_tokens, r.prompt_len - 1)
             cow_extra = 1 if shared_tokens > tail_start else 0
-            # Pages for the whole prompt, plus one decode page of headroom
-            # when the first appended token will cross a page boundary.
-            need = (self.cache.pages_for(
+            # Units for the whole prompt, plus one decode unit of headroom
+            # when the first appended token will cross a unit boundary.
+            need = (self.family.units_for(
                 min(r.prompt_len + 1, self._max_kv(r))
             ) - len(shared) + cow_extra)
             if need > 0 and self._alloc_denied():
@@ -907,33 +918,31 @@ class Scheduler:
             r.fed = 0
             r.admit_order = self._admit_counter
             self._admit_counter += 1
-            self.cache = self.cache.share(r.slot, shared)
-            fresh = self.cache.pages_for(r.prompt_len) - len(shared)
+            if shared:
+                self.family.share(r.slot, shared)
+            fresh = self.family.units_for(r.prompt_len) - len(shared)
             if fresh > 0:
-                self.cache = self.cache.allocate(r.slot, fresh)
+                self.family.alloc_state(r.slot, fresh)
             if cow_extra:
-                self.cache, n_cow = self.cache.ensure_writable(
+                self.stats.cow_copies += self.family.ensure_writable(
                     r.slot, tail_start, tail_start
                 )
-                self.stats.cow_copies += n_cow
+            # Reset the slot to fresh-prefill state: a no-op for paged
+            # families (new pages are empty), a state-row zero for
+            # recurrent ones — the half of eviction-replay that lives in
+            # device state rather than in the token bookkeeping.
+            self.family.replay(r.slot)
             if shared:
                 # Replay after eviction walks this same path: the lookup
                 # re-derives the mappings, so re-admission reuses the pages
                 # (bit-identical KV, int8 scales included) it had before.
                 self.stats.prefill_tokens_saved += tail_start
+                traffic, streams = self.family.share_account(
+                    tail_start, shared
+                )
                 self.stats.records.append(StepRecord(
                     step=self._step, kind="share", n_active=1, new_tokens=0,
-                    traffic=prefix_share_traffic(
-                        tail_start, len(shared), page,
-                        self.model.kv_token_bytes,
-                        elem_bits=self.model.kv_elem_bits,
-                        scale_bytes_per_token=self.model.kv_scale_token_bytes,
-                    ),
-                    streams=share_table_streams(
-                        shared, page, self.model.kv_token_bytes,
-                        kv_elem_bits=self.model.kv_elem_bits,
-                        scale_bytes_per_token=self.model.kv_scale_token_bytes,
-                    ),
+                    traffic=traffic, streams=streams,
                 ))
             self.resident.append(r)
 
@@ -945,10 +954,9 @@ class Scheduler:
         if not pending:
             return
         pending.sort(key=lambda x: x.admit_order)
-        b = self.cache.page_table.shape[0]
         toks, counts, slots, starts = build_prefill_rows(
             [(r.prompt, r.prefill_pos, r.slot) for r in pending],
-            self.chunk, b,
+            self.chunk, self.family.batch,
         )
         if self.prefix_index is not None:
             # Defensive: admission privatizes the only shared page a prefill
@@ -956,13 +964,10 @@ class Scheduler:
             # refcount scan that never copies — unless an invariant broke,
             # in which case copy-on-write still keeps siblings isolated.
             for i, r in enumerate(pending):
-                self.cache, n_cow = self.cache.ensure_writable(
+                self.stats.cow_copies += self.family.ensure_writable(
                     r.slot, int(starts[i]), int(starts[i] + counts[i]) - 1
                 )
-                self.stats.cow_copies += n_cow
-        logits, self.cache = self.model.prefill_batch(
-            toks, counts, slots, starts, self.cache
-        )
+        logits = self.family.prefill_batch(toks, counts, slots, starts)
         new_tokens = 0
         completed = []
         for i, r in enumerate(pending):
@@ -976,47 +981,28 @@ class Scheduler:
                     # Register the full prompt pages (the partial last page,
                     # which decode will keep writing, is never indexed) and
                     # give the index its refcount owner on the new entries.
-                    t = self.cache.page_table_host
-                    row = (t[r.slot] if t is not None
-                           else np.asarray(self.cache.page_table)[r.slot])
-                    n_full = r.prompt_len // self.cache.page_size
+                    n_full = r.prompt_len // self.family.page_size
                     new_pages = self.prefix_index.register(
-                        r.prompt, [int(p) for p in row[:n_full]]
+                        r.prompt, self.family.slot_unit_ids(r.slot)[:n_full]
                     )
-                    self.cache = self.cache.retain_pages(new_pages)
+                    self.family.retain_units(new_pages)
         if completed:
             lg = np.asarray(logits)  # host sync: admission boundary only
             for i, r in completed:
-                tok = int(np.argmax(lg[i, : self.model.cfg.vocab]))
+                tok = int(np.argmax(lg[i, : self.family.vocab]))
                 r.generated.append(tok)
                 new_tokens += 1
                 if r.on_token:
                     r.on_token(r, tok)
-        # Stream descriptors + traffic from the same host-shadow page math
-        # the kernel's scalar-prefetch walk resolves (as decode does).  The
-        # model's element width (8-bit for int8 pools) flows into both, so
-        # PACK reflects the real packed bytes on the bus.
-        table = (self.cache.page_table_host
-                 if self.cache.page_table_host is not None
-                 else np.asarray(self.cache.page_table))
+        # Stream descriptors + traffic in the family's own dialect, from
+        # the same host-shadow math its kernels resolve (as decode does).
         n = len(pending)
+        traffic, streams = self.family.prefill_account(
+            slots[:n], starts[:n], counts[:n]
+        )
         self.stats.records.append(StepRecord(
             step=self._step, kind="prefill", n_active=n,
-            new_tokens=new_tokens,
-            traffic=paged_prefill_traffic(
-                starts[:n], counts[:n],
-                self.cache.page_size, self.cache.pages_per_seq,
-                self.model.kv_token_bytes,
-                elem_bits=self.model.kv_elem_bits,
-                scale_bytes_per_token=self.model.kv_scale_token_bytes,
-            ),
-            streams=prefill_table_streams(
-                table[slots[:n]],  # fancy indexing: bounded per-row copy
-                starts[:n], counts[:n],
-                self.cache.page_size, self.model.kv_token_bytes,
-                kv_elem_bits=self.model.kv_elem_bits,
-                scale_bytes_per_token=self.model.kv_scale_token_bytes,
-            ),
+            new_tokens=new_tokens, traffic=traffic, streams=streams,
         ))
 
     # -- decode -------------------------------------------------------------
@@ -1025,18 +1011,17 @@ class Scheduler:
         """Decode steps until the next scheduling boundary.
 
         Between boundaries nothing the scheduler decides on can change: the
-        running set is fixed (retirement is a boundary), page tables are
+        running set is fixed (retirement is a boundary), unit mappings are
         fixed (growth is a boundary), and admission cannot unblock (slots
-        and pages free up only at boundaries).  While any resident is still
+        and units free up only at boundaries).  While any resident is still
         prefilling we keep single steps so prefill stays interleaved.
         """
         if any(r.state is RequestState.PREFILL for r in self.resident):
             return 1
         lens = self._lengths()
-        page = self.cache.page_size
         to_done = min(r.max_new - 1 - r.fed for r in running)
         to_growth = min(
-            self.cache._mapped(r.slot) * page - int(lens[r.slot])
+            self.family.token_capacity(r.slot) - int(lens[r.slot])
             for r in running
         )
         return max(1, min(to_done, to_growth))
@@ -1048,16 +1033,15 @@ class Scheduler:
         ]
         if not running:
             return
-        running = self._grow_pages(running)
+        running = self._grow_units(running)
         if not running:
             return
-        b = self.cache.page_table.shape[0]
+        b = self.family.batch
         tokens = np.zeros((b,), np.int32)
         active = np.zeros((b,), bool)
         for r in running:
             tokens[r.slot] = r.generated[r.fed]
             active[r.slot] = True
-        lens0 = self._lengths().copy()
 
         # Fuse up to the boundary: device-resident scan chunks, one token
         # sync at the end (the scheduling boundary).
@@ -1066,37 +1050,19 @@ class Scheduler:
             # Defensive: decode appends land past the prompt, and shared
             # pages only ever cover full prompt pages, so this scan never
             # copies unless an invariant broke (see _prefill_all).
+            lens0 = self._lengths()
             for r in running:
                 ln = int(lens0[r.slot])
-                self.cache, n_cow = self.cache.ensure_writable(
+                self.stats.cow_copies += self.family.ensure_writable(
                     r.slot, ln, ln + n - 1
                 )
-                self.stats.cow_copies += n_cow
-        table = (np.array(self.cache.page_table_host)
-                 if self.cache.page_table_host is not None
-                 else np.asarray(self.cache.page_table))
-        out, self.cache = self.model.decode_upto(
-            tokens, self.cache, active, n
-        )
+        # Per-step accounting snapshots come *before* the launch mutates the
+        # family's host shadows — identical records to a step-at-a-time run.
+        accounts = self.family.step_streams(active, n)
+        out = self.family.decode_steps(tokens, active, n)
 
-        # Per-step records from host shadow lengths: identical accounting to
-        # the step-at-a-time path.
         for s in range(n):
-            step_lens = np.zeros((b,), np.int64)
-            for r in running:
-                step_lens[r.slot] = int(lens0[r.slot]) + s + 1
-            streams = page_table_streams(
-                table, step_lens,
-                self.cache.page_size, self.model.kv_token_bytes,
-                kv_elem_bits=self.model.kv_elem_bits,
-                scale_bytes_per_token=self.model.kv_scale_token_bytes,
-            )
-            traffic = paged_decode_traffic(
-                step_lens[step_lens > 0], self.cache.page_size,
-                self.cache.pages_per_seq, self.model.kv_token_bytes,
-                elem_bits=self.model.kv_elem_bits,
-                scale_bytes_per_token=self.model.kv_scale_token_bytes,
-            )
+            traffic, streams = accounts[s]
             new_tokens = 0
             for r in running:
                 r.fed += 1
@@ -1112,22 +1078,23 @@ class Scheduler:
                 new_tokens=new_tokens, traffic=traffic, streams=streams,
             ))
 
-    def _grow_pages(self, running: List[Request]) -> List[Request]:
-        """Allocate a page for every running request whose next token lands on
-        a page boundary, evicting the cheapest low-priority resident when the
-        pool runs dry (the requester itself defers when it *is* the victim).
-        Returns the requests that still run this step."""
+    def _grow_units(self, running: List[Request]) -> List[Request]:
+        """Allocate a unit for every running request whose next token lands
+        past its slot's capacity, evicting the cheapest low-priority resident
+        when the pool runs dry (the requester itself defers when it *is* the
+        victim).  Returns the requests that still run this step.  Families
+        whose slots never grow (recurrent state) report unbounded capacity,
+        so this is pure pass-through for them."""
         lengths = self._lengths()
         deferred: set = set()
         for r in sorted(running, key=lambda x: x.admit_order):
             if r.state is not RequestState.RUNNING:
                 continue  # evicted below by another request's allocation
-            ln = int(lengths[r.slot])
-            if ln < self.cache._mapped(r.slot) * self.cache.page_size:
-                continue  # headroom left in the last mapped page
+            if int(lengths[r.slot]) < self.family.token_capacity(r.slot):
+                continue  # headroom left in the last mapped unit
             if self._alloc_denied():
                 # Fault: allocations fail this step.  The request keeps its
-                # slot and pages but sits out this step's decode; growth is
+                # slot and units but sits out this step's decode; growth is
                 # retried at the next boundary.  Nothing was mutated, so the
                 # pool stays consistent (the crash-consistency contract).
                 deferred.add(r.rid)
@@ -1137,7 +1104,7 @@ class Scheduler:
                 # Retained-but-unshared prefix pages are the cheapest relief
                 # (no resident loses work); then evict the lowest-priority
                 # resident with the cheapest replay (youngest on ties).  Each
-                # iteration frees a page, removes a resident, or empties the
+                # iteration frees a unit, removes a resident, or empties the
                 # index, so the loop terminates.
                 self._drop_retained(1)
                 if self._effective_free() >= 1:
@@ -1160,7 +1127,7 @@ class Scheduler:
                     self._evict(r)
                     break
                 self._evict(victim)  # may be r itself: it defers, not others
-            if r.state is RequestState.RUNNING and not self._try_allocate(
+            if r.state is RequestState.RUNNING and not self.family.grow(
                 r.slot, 1
             ):
                 deferred.add(r.rid)
@@ -1170,35 +1137,35 @@ class Scheduler:
         ]
         # Opportunistic lookahead: when nothing can be admitted or prefilled
         # before the next boundary AND the free pool covers *every* running
-        # request's full remaining generation, map those pages up front, so
-        # page growth stops being a scheduling boundary and decode fuses
-        # through.  The all-or-nothing condition means lookahead can never
-        # starve a peer's imminent on-demand growth (no extra evictions
-        # versus the on-demand policy); under pool pressure it simply stays
-        # off and behaviour is exactly the on-demand path.
+        # request's full remaining generation, map those units up front, so
+        # growth stops being a scheduling boundary and decode fuses through.
+        # The all-or-nothing condition means lookahead can never starve a
+        # peer's imminent on-demand growth (no extra evictions versus the
+        # on-demand policy); under pool pressure it simply stays off and
+        # behaviour is exactly the on-demand path.
         if not self.queue and not self._alloc_denied() and not any(
             x.state is RequestState.PREFILL for x in self.resident
         ):
             lens = self._lengths()
             wants = {
-                r.rid: (self.cache.pages_for(
+                r.rid: (self.family.units_for(
                     int(lens[r.slot]) + (r.max_new - 1 - r.fed)
-                ) - self.cache._mapped(r.slot))
+                ) - self.family.mapped_units(r.slot))
                 for r in still
             }
             if sum(max(w, 0) for w in wants.values()) <= self._effective_free():
                 for r in sorted(still, key=lambda x: x.admit_order):
                     if wants[r.rid] > 0:
-                        self.cache = self.cache.allocate(r.slot, wants[r.rid])
+                        self.family.alloc_state(r.slot, wants[r.rid])
         return still
 
     def _evict(self, r: Request) -> None:
-        """Release ``r``'s pages and slot, then requeue it for bit-identical
+        """Release ``r``'s units and slot, then requeue it for bit-identical
         replay — unless replaying it would blow its ``replay_budget``, in
         which case it lands in the terminal PREEMPTED state with its partial
         output intact."""
         cost = r.replay_cost  # before release: prompt + tokens to re-derive
-        self.cache = self.cache.release(r.slot)
+        self.family.release(r.slot)
         self.resident.remove(r)
         self._free_slots.append(r.slot)
         r.slot = -1
@@ -1225,7 +1192,7 @@ class Scheduler:
 
     def _retire(self) -> None:
         for r in [x for x in self.resident if x.done]:
-            self.cache = self.cache.release(r.slot)
+            self.family.release(r.slot)
             self.resident.remove(r)
             self._free_slots.append(r.slot)
             r.slot = -1
@@ -1237,49 +1204,3 @@ class Scheduler:
             self.finished[r.rid] = r
             if r.on_finish:
                 r.on_finish(r)
-
-
-def static_batch_generate(
-    model: PagedLM,
-    cache: PagedKVCache,
-    prompts: Sequence[np.ndarray],
-    max_new: int,
-    chunk: int = 8,
-) -> Dict[int, List[int]]:
-    """Reference: all prompts prefilled up front, then one static decode batch.
-
-    Uses the same jitted single-step prefill/decode building blocks the
-    scheduler's fused fast path is made of (one-row ``prefill_batch`` calls,
-    ``decode_step`` with host-side argmax), so scheduled continuous batching
-    must reproduce these tokens bit-for-bit (asserted in
-    tests/test_scheduler.py).  Requires a pool large enough to hold every
-    sequence at once.
-    """
-    b = cache.page_table.shape[0]
-    assert len(prompts) <= b, "static batch needs one slot per prompt"
-    out: Dict[int, List[int]] = {}
-    for i, prompt in enumerate(prompts):
-        cache = cache.allocate(i, cache.pages_for(len(prompt) + max_new))
-        toks: List[int] = []
-        for start in range(0, len(prompt), chunk):
-            count = min(chunk, len(prompt) - start)
-            buf = np.zeros((chunk,), np.int32)
-            buf[:count] = np.asarray(prompt)[start:start + count]
-            logits, cache = model.prefill_chunk(
-                jnp.asarray(buf), count, i, start, cache
-            )
-        toks.append(int(np.argmax(np.asarray(logits)[: model.cfg.vocab])))
-        out[i] = toks
-    for _ in range(max_new - 1):
-        tokens = np.zeros((b,), np.int32)
-        active = np.zeros((b,), bool)
-        for i in range(len(prompts)):
-            tokens[i] = out[i][-1]
-            active[i] = True
-        logits, cache = model.decode_step(
-            jnp.asarray(tokens), cache, jnp.asarray(active)
-        )
-        nxt = np.argmax(np.asarray(logits)[:, : model.cfg.vocab], axis=-1)
-        for i in range(len(prompts)):
-            out[i].append(int(nxt[i]))
-    return out

@@ -307,6 +307,65 @@ def test_prefix_drop_fault_forces_reprefill_same_outputs():
     assert sched.stats.n_prefix_drops >= 1
 
 
+def test_prefix_drop_skips_counted_without_prefix_index():
+    """drop_prefix against an engine with no prefix index (sharing off, or a
+    recurrent family that has no token-granular units at all) must no-op
+    with a counted skip — never raise, never change tokens."""
+    model = MODELS["fp32"]
+    rng = np.random.default_rng(12)
+    prompt = rng.integers(0, CFG.vocab, 6).astype(np.int32)
+    plan = FaultPlan(seed=12, drop_prefix_at=frozenset(range(1, 8)))
+    cache = PagedKVCache.create(CFG, batch=1, max_len=MAX_LEN, page=PAGE)
+    clean_cache = PagedKVCache.create(CFG, batch=1, max_len=MAX_LEN, page=PAGE)
+    clean = chaos_drive(Scheduler(model, clean_cache, chunk=4),
+                        [Request(rid=0, prompt=prompt.copy(), max_new=6)])
+    sched = Scheduler(model, cache, chunk=4, faults=plan)  # sharing off
+    out = chaos_drive(sched, [Request(rid=0, prompt=prompt.copy(), max_new=6)])
+    assert out == clean
+    assert sched.stats.n_prefix_drop_skips >= 1
+    assert sched.stats.n_prefix_drops == 0
+
+
+def test_chaos_recurrent_family_seed_matrix():
+    """The full random fault plan against a recurrent (RWKV6) scheduler:
+    prefix-drop faults are family-inapplicable (counted skips), exhaustion
+    and denial degrade via the same evict/defer ladder, and surviving
+    outputs stay bit-for-bit the fault-free ones."""
+    from repro.serve import RecurrentLM
+
+    rcfg = smoke_config("rwkv6-3b")
+    rmodel = RecurrentLM(rcfg, jax.random.PRNGKey(0), impl="ref")
+    for seed in range(SEED_BASE, SEED_BASE + SEEDS_PER_CASE):
+        rng = np.random.default_rng(1000 + seed)
+        prompts = [rng.integers(0, rcfg.vocab, int(rng.integers(2, 10)))
+                   .astype(np.int32) for _ in range(4)]
+
+        def run(faults):
+            sched = Scheduler(rmodel, rmodel.init_pool(2), chunk=3,
+                              faults=faults)
+            reqs = [Request(rid=i, prompt=p.copy(), max_new=4)
+                    for i, p in enumerate(prompts)]
+            return chaos_drive(sched, reqs), sched, reqs
+
+        clean_out, _, _ = run(None)
+        plan = FaultPlan.random(seed, n_steps=16, p_exhaust=0.3,
+                                p_deny=0.2, p_drop=0.5)
+        chaos_out, sched, reqs = run(plan)
+        states = terminal_states(reqs)
+        assert set(states.values()) <= {"finished", "preempted"}
+        for rid, toks in chaos_out.items():
+            assert toks == clean_out[rid], (
+                f"seed {seed}: rid {rid} diverged under recurrent chaos"
+            )
+        assert set(clean_out) == {r.rid for r in reqs}
+        # Inapplicable prefix drops were skipped, not raised (plan always
+        # has drop steps at p_drop=0.5 over 16 steps for these seeds).
+        if plan.drop_prefix_at:
+            assert sched.stats.n_prefix_drop_skips >= 1
+        # Drained state pool is leak-free.
+        assert sched.family.free_units == 2
+
+
 def test_injected_latency_trips_straggler_watchdog():
     model = MODELS["fp32"]
     rng = np.random.default_rng(9)

@@ -1,5 +1,5 @@
-"""Serving-path tests: chunked prefill equivalence, engine generation,
-paged cache bookkeeping, w8a16 end-to-end generation."""
+"""Serving-path tests: chunked prefill equivalence, dense baseline
+generation, paged cache bookkeeping, w8a16 end-to-end generation."""
 import dataclasses
 
 import jax
@@ -8,9 +8,10 @@ import numpy as np
 import pytest
 
 from repro.configs import ALL_ARCH_NAMES, smoke_config
+from repro.launch.serve import dense_generate
 from repro.models import lm
 from repro.parallel.sharding import make_rules
-from repro.serve import PagedKVCache, ServeEngine
+from repro.serve import PagedKVCache
 
 RULES = make_rules(with_pod=False, batch_axes=None)
 
@@ -33,28 +34,25 @@ def test_chunked_prefill_equals_monolithic(name):
         assert float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max()) < 2e-2
 
 
-def test_engine_greedy_deterministic():
+def test_dense_generate_greedy_deterministic():
     cfg = smoke_config("yi-6b")
     params = lm.init_model(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     prompts = jnp.asarray(rng.integers(0, cfg.vocab, (3, 8)), jnp.int32)
-    e1 = ServeEngine(cfg, params, RULES, max_len=32, batch=3)
-    e2 = ServeEngine(cfg, params, RULES, max_len=32, batch=3)
-    o1 = e1.generate(prompts, n_new=8)
-    o2 = e2.generate(prompts, n_new=8)
+    o1 = dense_generate(cfg, params, RULES, prompts, n_new=8, max_len=32)
+    o2 = dense_generate(cfg, params, RULES, prompts, n_new=8, max_len=32)
     np.testing.assert_array_equal(o1, o2)
     assert o1.shape == (3, 8)
     assert o1.max() < cfg.vocab  # TP-padding classes never sampled
 
 
-def test_engine_generation_matches_decode_loop():
-    """Engine output == hand-rolled prefill+decode greedy loop."""
+def test_dense_generate_matches_decode_loop():
+    """dense_generate output == hand-rolled prefill+decode greedy loop."""
     cfg = smoke_config("qwen2.5-14b")
     params = lm.init_model(cfg, jax.random.PRNGKey(1))
     rng = np.random.default_rng(1)
     prompts = jnp.asarray(rng.integers(0, cfg.vocab, (2, 6)), jnp.int32)
-    eng = ServeEngine(cfg, params, RULES, max_len=24, batch=2)
-    out = eng.generate(prompts, n_new=6)
+    out = dense_generate(cfg, params, RULES, prompts, n_new=6, max_len=24)
 
     cache = lm.init_cache(cfg, 2, 24)
     logits, cache = lm.prefill(params, {"tokens": prompts}, cache, cfg, RULES)
@@ -120,8 +118,8 @@ def test_w8a16_generation_consistent():
     qparams = lm.quantize_mlp_weights(params, cfg)
     rng = np.random.default_rng(2)
     prompts = jnp.asarray(rng.integers(0, cfg.vocab, (2, 8)), jnp.int32)
-    o_full = ServeEngine(cfg, params, RULES, max_len=24, batch=2).generate(prompts, 4)
-    o_q = ServeEngine(cfg, qparams, RULES, max_len=24, batch=2).generate(prompts, 4)
+    o_full = dense_generate(cfg, params, RULES, prompts, 4, max_len=24)
+    o_q = dense_generate(cfg, qparams, RULES, prompts, 4, max_len=24)
     assert o_q.shape == o_full.shape
     assert o_q.max() < cfg.vocab
     # random-init logits are near-ties, so just require the first step agrees
