@@ -14,7 +14,9 @@ trajectory can be tracked run-over-run (CI uploads it as an artifact).
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
+import os
 import sys
 import time
 
@@ -178,6 +180,26 @@ def main() -> None:
               f"state_slot_bytes={row['state_slot_bytes']},"
               f"outputs_match={row['outputs_match']}")
 
+    # ---- Serving, speculative decoding: draft-k, verify once ------------
+    # The n-gram drafter proposes spec_k-1 tokens per step; one
+    # paged_verify launch scores all of them in a single clamped page walk
+    # and the accept/reject + KV rollback run on device.  Each row re-runs
+    # the spec_k=1 workload and asserts the emitted outputs are bit-for-bit
+    # the plain greedy outputs.
+    from .serving import spec_rows
+    print("\n# Serving speculative: multi-query verify tokens/s vs plain "
+          "fused decode (outputs bit-for-bit vs spec_k=1)")
+    specrows = spec_rows(quick=args.quick)
+    for row in specrows:
+        print(f"serving_spec,b={row['batch']},k={row['spec_k']},"
+              f"tokens_s={row['tokens_per_s']:.0f},"
+              f"speedup={row['speedup_vs_plain']:.2f}x,"
+              f"acceptance={row['acceptance_rate']:.1%},"
+              f"verify_steps={row['verify_steps']},"
+              f"plain_decode_steps={row['plain_decode_steps']},"
+              f"pack_eff={row['pack_eff']:.1%},base_eff={row['base_eff']:.1%},"
+              f"outputs_match={row['outputs_match']}")
+
     # ---- Serving, degradation: throughput under pool pressure + chaos ---
     # Mixed-SLA workload vs shrinking pools and a seeded fault plan: the
     # robustness counters (evictions / preemptions / rejections / deadline
@@ -239,11 +261,37 @@ def main() -> None:
             },
             "serving_shared_prefix": {"rows": prows},
             "serving_families": {"rows": frows},
+            "serving_spec": {"rows": specrows},
             "serving_degradation": {"rows": drows},
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"# serving sweep written to {args.json}")
+
+        # One dated line per run so the perf trajectory is greppable
+        # without diffing full artifacts.  Lives next to the JSON path;
+        # the committed full-sweep history is BENCH_history.jsonl at the
+        # repo root, quick CI runs append to their own workspace copy.
+        hist = os.path.join(
+            os.path.dirname(os.path.abspath(args.json)) or ".",
+            "BENCH_history.jsonl")
+        spec_best = max(specrows, key=lambda r: r["speedup_vs_plain"])
+        entry = {
+            "date": datetime.date.today().isoformat(),
+            "quick": bool(args.quick),
+            "decode_tokens_per_s": {
+                str(r["batch"]): round(r["tokens_per_s"], 1) for r in srows},
+            "spec_best": {
+                "batch": spec_best["batch"],
+                "spec_k": spec_best["spec_k"],
+                "speedup_vs_plain": round(spec_best["speedup_vs_plain"], 3),
+                "acceptance_rate": round(spec_best["acceptance_rate"], 3),
+            },
+            "spec_outputs_match": all(r["outputs_match"] for r in specrows),
+        }
+        with open(hist, "a") as f:
+            f.write(json.dumps(entry) + "\n")
+        print(f"# history entry appended to {hist}")
 
     # ---- Roofline (if dry-run artifacts exist) ------------------------
     try:

@@ -18,6 +18,7 @@ from .streams import (
     page_table_streams,
     prefill_table_streams,
     recurrent_state_streams,
+    verify_table_streams,
 )
 from .packing import (
     Traffic,
@@ -28,6 +29,7 @@ from .packing import (
     paged_decode_traffic,
     paged_prefill_traffic,
     prefill_page_counts,
+    spec_verify_traffic,
     recurrent_decode_traffic,
     recurrent_prefill_traffic,
     strided_traffic,

@@ -29,6 +29,7 @@ __all__ = [
     "paged_decode_traffic",
     "prefill_page_counts",
     "paged_prefill_traffic",
+    "spec_verify_traffic",
     "prefix_share_traffic",
     "recurrent_decode_traffic",
     "recurrent_prefill_traffic",
@@ -276,6 +277,59 @@ def paged_prefill_traffic(
     batch = int(np.count_nonzero(ct))
     base = (batch * pages_per_seq * page_size * token_bytes
             + int(np.sum(ct)) * granule_bytes)
+    pack = (ctx_pages + chunk_pages) * page_size * packed
+    pack = int(np.ceil(pack / granule_bytes)) * granule_bytes if pack else 0
+    idx = (ctx_pages + chunk_pages) * index_bytes
+    idx = int(np.ceil(idx / granule_bytes)) * granule_bytes if idx else 0
+    return Traffic(useful, base, pack, 0, idx)
+
+
+def spec_verify_traffic(
+    lengths,
+    scored,
+    page_size: int,
+    pages_per_seq: int,
+    token_bytes: int,
+    index_bytes: int = 4,
+    granule_bytes: int = 32,
+    elem_bits: int = 32,
+    scale_bytes_per_token: int = 0,
+) -> Traffic:
+    """Traffic of one speculative K-token verify step, BASE vs PACK.
+
+    ``lengths[r]`` is row ``r``'s context before the step and ``scored[r]``
+    how many query tokens (feed + drafts, 0 for inactive rows) the verify
+    kernel scored in its single walk.  The page math is prefill's with
+    ``starts = lengths`` — a verify chunk *is* a causal chunk at the
+    context tail — but the **BASE counterfactual is different**, and it is
+    the point of the whole speculative path:
+
+    * **BASE** is the non-speculative narrow decoder emitting the same
+      tokens one at a time: ``scored[r]`` separate full-width padded walks
+      per row (``sum(scored) × pages_per_seq × page_size × token_bytes``)
+      plus one transaction granule per written row.  This is what PR-7's
+      decode path actually pays per K tokens.
+    * **PACK** walks each row's context pages **once** for all K queries
+      (the packed indirect burst amortized over the time axis, not just
+      the batch axis) and writes only the chunk pages — both at the packed
+      width (:func:`packed_token_bytes`), with the page-table entries
+      fetched near memory (``index_bus_bytes_pack``).
+    * ``useful_bytes`` is one context read plus the rows written, at the
+      packed width — same form as prefill.
+
+    The BASE/PACK ratio therefore approaches ``K ×`` the plain-decode
+    ratio at full acceptance, degrading gracefully with ``scored``.
+    """
+    lens = np.asarray(lengths, dtype=np.int64)
+    sc = np.asarray(scored, dtype=np.int64)
+    live = np.where(sc > 0, lens + sc, 0)
+    packed = packed_token_bytes(token_bytes, elem_bits, scale_bytes_per_token)
+    ctx, chunk = prefill_page_counts(lens, sc, page_size)
+    ctx_pages = int(np.sum(ctx))
+    chunk_pages = int(np.sum(chunk))
+    useful = int(np.sum(live) + np.sum(sc)) * packed
+    base = (int(np.sum(sc)) * pages_per_seq * page_size * token_bytes
+            + int(np.sum(sc)) * granule_bytes)
     pack = (ctx_pages + chunk_pages) * page_size * packed
     pack = int(np.ceil(pack / granule_bytes)) * granule_bytes if pack else 0
     idx = (ctx_pages + chunk_pages) * index_bytes

@@ -35,6 +35,7 @@ __all__ = [
     "beats_for",
     "page_table_streams",
     "prefill_table_streams",
+    "verify_table_streams",
     "share_table_streams",
     "recurrent_state_streams",
 ]
@@ -289,6 +290,35 @@ def prefill_table_streams(
             )
         )
     return tuple(out)
+
+
+def verify_table_streams(
+    page_table,
+    lengths,
+    scored,
+    page_size: int,
+    token_bytes: int,
+    index_bits: int = 32,
+    kv_elem_bits: int = 32,
+    scale_bytes_per_token: int = 0,
+) -> Tuple["IndirectStream", ...]:
+    """Indirect-stream descriptors for one speculative K-token verify step.
+
+    A verify chunk is a causal prefill chunk appended at the context tail,
+    so the descriptors *are* :func:`prefill_table_streams` with
+    ``starts = lengths`` — per active row one context-read stream over the
+    leading ``ceil((length + scored)/page)`` table entries (the single
+    clamped walk ``paged_verify`` amortizes over all K queries, where plain
+    decode would emit ``scored`` separate walks) and one chunk-write stream
+    over the pages the K appended tokens land in.  Shares its page math
+    with :func:`repro.core.packing.spec_verify_traffic` through
+    :func:`repro.core.packing.prefill_page_counts`.
+    """
+    return prefill_table_streams(
+        page_table, lengths, scored, page_size, token_bytes,
+        index_bits=index_bits, kv_elem_bits=kv_elem_bits,
+        scale_bytes_per_token=scale_bytes_per_token,
+    )
 
 
 def share_table_streams(

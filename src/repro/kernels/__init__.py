@@ -13,6 +13,8 @@ from .ops import (
     moe_dispatch,
     paged_decode_attention,
     paged_prefill_attention,
+    paged_verify,
+    speculative_accept,
     spmv_ell,
     strided_gather,
     strided_scatter,

@@ -33,6 +33,7 @@ from .spmv import spmv_ell_kernel
 from .flash_attention import flash_attention_kernel
 from .paged_decode import paged_decode_attention_kernel
 from .paged_prefill import paged_prefill_attention_kernel
+from .paged_verify import paged_verify_attention_kernel
 
 __all__ = [
     "on_cpu",
@@ -47,6 +48,8 @@ __all__ = [
     "flash_attention",
     "paged_decode_attention",
     "paged_prefill_attention",
+    "paged_verify",
+    "speculative_accept",
     "paged_kv_append",
     "paged_kv_write_chunk",
     "moe_dispatch",
@@ -357,6 +360,60 @@ def paged_prefill_attention(
         k_scale=k_scale, v_scale=v_scale, scale=scale,
         interpret=_interpret(),
     )
+
+
+def paged_verify(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    ctx_rows: jax.Array,
+    lengths: jax.Array,
+    counts: jax.Array,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
+    scale: Optional[float] = None,
+    impl: str = "pallas",
+) -> jax.Array:
+    """Score K speculative tokens per sequence in one clamped page walk.
+
+    q:       (B, K, H, D) verify queries — the feed token at position 0,
+             draft tokens after it; query ``i`` of row ``r`` sits at
+             absolute position ``lengths[r] + i``
+    counts:  (B,) valid queries per row (0..K); 0 = padding row, zero out
+
+    The speculative-decoding verify step: K causal queries amortize one
+    indirect page walk that plain decode would repeat K times.  A verify
+    chunk is a prefill chunk appended at the context tail, so both impls
+    share the prefill code paths with ``starts = lengths`` (the Pallas
+    kernel reuses the clamped scalar-prefetch walk + online softmax; the
+    oracle the dense gather + einsum), and ``k_scale``/``v_scale`` opt
+    into the same int8 pool layout.  Acceptance is separate — see
+    :func:`speculative_accept`.
+    """
+    if impl == "ref":
+        if k_scale is not None:
+            k_pages = ref.dequantize_pages(k_pages, k_scale)
+            v_pages = ref.dequantize_pages(v_pages, v_scale)
+        return ref.paged_verify_attention(
+            q, k_pages, v_pages, ctx_rows, lengths, counts, scale=scale
+        )
+    return paged_verify_attention_kernel(
+        q, k_pages, v_pages, ctx_rows, lengths, counts,
+        k_scale=k_scale, v_scale=v_scale, scale=scale,
+        interpret=_interpret(),
+    )
+
+
+def speculative_accept(
+    drafts: jax.Array, greedy: jax.Array, counts: jax.Array
+) -> jax.Array:
+    """Greedy first-mismatch acceptance: how many verify tokens to emit.
+
+    Pure jnp (no kernel needed — it's O(B·K) int math) and shared by both
+    impls so accept/reject stays on device; see
+    :func:`repro.kernels.ref.speculative_accept` for the contract.
+    """
+    return ref.speculative_accept(drafts, greedy, counts)
 
 
 def paged_kv_append(

@@ -243,6 +243,65 @@ def paged_prefill_attention(
     return out.astype(q.dtype)
 
 
+def paged_verify_attention(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    ctx_rows: jax.Array,
+    lengths: jax.Array,
+    counts: jax.Array,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Multi-query speculative verify attention (oracle, dense einsum).
+
+    q:         (B, K, H, D)   verify queries — query ``i`` of row ``r`` is
+               the token at absolute position ``lengths[r] + i``
+    k/v_pages: (P, page, KVH, D) physical pool (the K query tokens' K/V
+               already written, append-then-attend as in prefill)
+    ctx_rows:  (B, ctx_pages) leading page-table entries per row
+    lengths:   (B,) context tokens per row *before* this verify chunk
+    counts:    (B,) valid query tokens per row (0 = padding row, zero out)
+
+    A verify chunk is a causal prefill chunk appended at the context tail,
+    so the oracle *is* :func:`paged_prefill_attention` with
+    ``starts = lengths`` — one definition, shared bit-for-bit with the
+    serving prefill path.
+    """
+    return paged_prefill_attention(
+        q, k_pages, v_pages, ctx_rows, lengths, counts, scale=scale
+    )
+
+
+def speculative_accept(
+    drafts: jax.Array, greedy: jax.Array, counts: jax.Array
+) -> jax.Array:
+    """Greedy accept/reject for speculative decoding (on-device, exact).
+
+    drafts: (B, K-1) int32 draft tokens d_1..d_{K-1} (positions after the
+            feed token)
+    greedy: (B, K)   int32 argmax of the verify logits at every position
+            (``greedy[:, i]`` is the model's true next token after
+            position ``lengths + i``)
+    counts: (B,)     int32 query tokens actually scored per row (0..K;
+            capacity clamping / inactive rows give 0)
+
+    Returns ``n_emit`` (B,) int32 — how many of the K scored tokens are
+    *emitted* per row: the accepted draft prefix plus the model's one
+    bonus token, capped at ``counts``.  Draft ``i`` is accepted iff every
+    draft before it matched too (first-mismatch truncation):
+
+        a      = Σ_i  Π_{j<=i} [drafts[j] == greedy[j]]
+        n_emit = min(a + 1, counts)
+
+    With K == 1 (no drafts) this is ``min(1, counts)`` — plain decode.
+    Greedy acceptance is exact: the emitted tokens ``greedy[:, :n_emit]``
+    are bitwise the tokens non-speculative decode would have produced.
+    """
+    match = (drafts == greedy[:, : drafts.shape[1]]).astype(jnp.int32)
+    a = jnp.sum(jnp.cumprod(match, axis=1), axis=1)
+    return jnp.minimum(a + 1, counts).astype(jnp.int32)
+
+
 def paged_kv_append(
     k_pages: jax.Array,
     v_pages: jax.Array,

@@ -8,6 +8,7 @@ transformer engine to it; ``recurrent_lm`` serves fixed-size-state models
 out of donated state pools; ``scheduler`` drives any family; ``faults``
 injects chaos and checks invariants — family-agnostically.
 """
+from .drafter import Drafter, NGramDrafter, TinyLMDrafter
 from .family import OutOfPages, ServableFamily
 from .kv import PagedKVCache
 from .paged_lm import PagedFamily, PagedLM, static_batch_generate

@@ -1,0 +1,144 @@
+"""Draft-token providers for speculative decoding.
+
+A :class:`Drafter` proposes the ``K-1`` cheap draft tokens that ride after
+the feed token into each multi-query verify launch
+(:func:`repro.kernels.ops.paged_verify`).  All three methods are traced
+into the fused ``lax.scan`` verify loop, so they must be pure jnp over
+device arrays — the drafter state lives in the scan carry and never
+crosses to the host on the hot path.
+
+Correctness does not depend on the drafter at all: greedy verify emits
+``argmax`` tokens of the *target* model only, and the first-mismatch
+acceptance rule discards every draft the target disagrees with.  A wrong
+draft costs throughput (fewer tokens per page walk), never bits — which
+is why eviction replay can ignore drafter state entirely and still
+rebuild sequences bit-for-bit.
+
+Two deterministic drafters ship here:
+
+* :class:`NGramDrafter` — a per-slot bigram table updated on device from
+  the accepted tokens.  Free (no extra matmuls), and effective exactly
+  where greedy decode is most repetitive.
+* :class:`TinyLMDrafter` — a tied-embedding greedy head
+  (``argmax(embed[t] @ embed.T)`` chained ``K-1`` times).  The
+  "small-model" hook: hand it any :class:`~repro.serve.paged_lm.PagedLM`'s
+  embedding (e.g. a cheaper small-config model) and it drafts with that
+  model's bigram preferences, KV-cache-free.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Drafter", "NGramDrafter", "TinyLMDrafter"]
+
+
+class Drafter:
+    """Protocol for speculative draft-token providers.
+
+    ``state`` is an arbitrary pytree of device arrays (possibly empty); it
+    rides the verify scan carry, so every method must be jnp-traceable.
+    One instance is baked into each jitted verify program, so a drafter
+    must be immutable after construction.
+    """
+
+    def init_state(self, batch: int) -> Any:
+        """Fresh drafter state for ``batch`` slots (pytree of arrays)."""
+        raise NotImplementedError
+
+    def draft(self, state: Any, feed: jax.Array, k: int) -> jax.Array:
+        """Propose ``k`` draft tokens per slot following ``feed`` (B,).
+
+        Returns (B, k) int32 — chained: draft ``i`` continues draft
+        ``i-1``.  ``k == 0`` (spec_k == 1) must return a (B, 0) array.
+        """
+        raise NotImplementedError
+
+    def update(self, state: Any, q_tokens: jax.Array, greedy: jax.Array,
+               n_emit: jax.Array) -> Any:
+        """Fold one verify step's outcome back into the state.
+
+        q_tokens (B, K) are the scored tokens, ``greedy`` (B, K) the
+        target model's argmax after each, ``n_emit`` (B,) how many were
+        emitted — positions ``i < n_emit[b]`` are *known* transitions
+        ``q_tokens[b, i] -> greedy[b, i]``; everything past that is
+        speculation the target rejected and must not be learned.
+        """
+        raise NotImplementedError
+
+
+def _empty_drafts(feed: jax.Array) -> jax.Array:
+    return jnp.zeros((feed.shape[0], 0), jnp.int32)
+
+
+class NGramDrafter(Drafter):
+    """Per-slot device-resident bigram table (token -> predicted next).
+
+    State is a (B, vocab) int32 table, zero-initialized (every unseen
+    token predicts token 0).  Drafting chains ``k`` lookups from the feed
+    token; the update scatters each emitted transition, with rejected
+    positions routed out of bounds and dropped — all O(B·K) int ops, no
+    extra model flops.
+    """
+
+    def __init__(self, vocab: int):
+        self.vocab = vocab
+
+    def init_state(self, batch: int) -> jax.Array:
+        return jnp.zeros((batch, self.vocab), jnp.int32)
+
+    def draft(self, state: jax.Array, feed: jax.Array, k: int) -> jax.Array:
+        if k == 0:
+            return _empty_drafts(feed)
+        t = feed.astype(jnp.int32)
+        out = []
+        for _ in range(k):
+            t = jnp.take_along_axis(state, t[:, None], axis=1)[:, 0]
+            out.append(t)
+        return jnp.stack(out, axis=1)
+
+    def update(self, state: jax.Array, q_tokens: jax.Array,
+               greedy: jax.Array, n_emit: jax.Array) -> jax.Array:
+        b, k = q_tokens.shape
+        rows = jnp.arange(b, dtype=jnp.int32)
+        for i in range(k):
+            # Rejected/clamped positions scatter to column ``vocab`` (OOB)
+            # and are dropped — only emitted transitions are learned.
+            col = jnp.where(i < n_emit, q_tokens[:, i], self.vocab)
+            state = state.at[rows, col].set(greedy[:, i], mode="drop")
+        return state
+
+
+class TinyLMDrafter(Drafter):
+    """Stateless tied-embedding greedy head over a draft embedding matrix.
+
+    ``draft`` chains ``t -> argmax(embed[t] @ embed.T)`` — the zero-layer
+    limit of a small-config :class:`~repro.serve.paged_lm.PagedLM` run
+    greedily without a KV cache.  Pass any model's ``params["embed"]``
+    (typically a smaller config than the target) to draft with its
+    next-token preferences at one matvec per draft position.
+    """
+
+    def __init__(self, embed: jax.Array, vocab: int | None = None):
+        self.embed = embed
+        self.vocab = int(vocab if vocab is not None else embed.shape[0])
+
+    def init_state(self, batch: int) -> tuple:
+        return ()
+
+    def draft(self, state: tuple, feed: jax.Array, k: int) -> jax.Array:
+        if k == 0:
+            return _empty_drafts(feed)
+        t = feed.astype(jnp.int32)
+        out = []
+        for _ in range(k):
+            logits = jnp.take(self.embed, t, axis=0) @ self.embed.T
+            t = jnp.argmax(logits[:, : self.vocab], axis=-1).astype(jnp.int32)
+            out.append(t)
+        return jnp.stack(out, axis=1)
+
+    def update(self, state: tuple, q_tokens: jax.Array, greedy: jax.Array,
+               n_emit: jax.Array) -> tuple:
+        return state

@@ -179,6 +179,35 @@ class ServableFamily(abc.ABC):
         matrix (one sync at the boundary).  Must be bitwise identical to
         ``n`` single steps — the replay guarantee rests on it."""
 
+    # -- speculative decoding (optional) ------------------------------------
+
+    @property
+    def spec_k(self) -> int:
+        """Speculative verify width: tokens scored per sequence per verify
+        launch step.  1 (the default) means the family decodes plainly and
+        the scheduler never calls the verify methods below — families
+        without a speculative path need to change nothing."""
+        return 1
+
+    def verify_steps(self, tokens: np.ndarray, active: np.ndarray,
+                     n: int) -> Tuple[np.ndarray, np.ndarray]:
+        """``n`` fused draft→verify→accept steps over ``active`` slots.
+
+        Returns ``(toks (n, B, spec_k), counts (n, B))`` host arrays: step
+        ``s`` emitted ``counts[s, b]`` tokens for slot ``b``, namely
+        ``toks[s, b, :counts[s, b]]`` (one device sync at the boundary).
+        Emitted tokens must be bitwise the plain greedy decode sequence —
+        the replay guarantee extends to speculation unchanged."""
+        raise NotImplementedError(f"{self.name}: no speculative decoding")
+
+    def verify_account(self, lens0: np.ndarray, active: np.ndarray,
+                       counts: np.ndarray) -> List[Tuple[Traffic, tuple]]:
+        """Per-step (Traffic, stream descriptors) for a verify run that
+        just completed — called *after* ``verify_steps`` with the
+        pre-launch length shadow ``lens0`` and the emitted ``counts``,
+        since speculative context lengths are data-dependent."""
+        raise NotImplementedError(f"{self.name}: no speculative decoding")
+
     # -- traffic accounting -------------------------------------------------
 
     @abc.abstractmethod

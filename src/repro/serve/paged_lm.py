@@ -34,13 +34,16 @@ from repro.core.packing import (
     paged_decode_traffic,
     paged_prefill_traffic,
     prefix_share_traffic,
+    spec_verify_traffic,
 )
 from repro.core.streams import (
     page_table_streams,
     prefill_table_streams,
     share_table_streams,
+    verify_table_streams,
 )
 from repro.kernels import ops as kops
+from .drafter import Drafter, NGramDrafter
 from .family import ServableFamily
 from .kv import PagedKVCache, _donation_noop_ok
 
@@ -197,6 +200,118 @@ def _paged_lm_prefill_batch(params, tokens, counts, seqs, starts, k_pages,
             jnp.stack(vss) if quantized else None, new_len)
 
 
+def _paged_lm_verify_step(params, q_tokens, k_pages, v_pages, k_scale,
+                          v_scale, page_table, lengths, counts, *, h, kvh,
+                          hd, ctx_pages, impl):
+    """Score K speculative tokens per sequence in one multi-query pass.
+
+    q_tokens (B, K) int32 — the feed token at column 0, draft tokens after
+    it; row ``b``'s token ``i`` sits at absolute position
+    ``lengths[b] + i``.  ``counts`` (B,) bounds the valid tokens per row
+    (0..K; 0 = inactive row, touches nothing).
+
+    Structurally one prefill-chunk pass with ``starts = lengths``: each
+    layer scatters the chunk's K/V through the chunk-bounded indirect
+    write, then :func:`repro.kernels.ops.paged_verify` scores all K causal
+    queries in **one** clamped page walk — the walk plain decode would
+    repeat K times.  Returns per-position logits (B, K, vocab) plus the
+    updated pools; lengths are *not* advanced here (the accept step owns
+    that, since only accepted tokens survive).
+    """
+    n_layers = params["wq"].shape[0]
+    b, k = q_tokens.shape
+    quantized = k_scale is not None
+    x = jnp.take(params["embed"], q_tokens, axis=0)        # (B, K, d)
+    ctx_rows = page_table[:, :ctx_pages]
+    kps, vps, kss, vss = [], [], [], []
+    for l in range(n_layers):
+        kn = (x @ params["wk"][l]).reshape(b, k, kvh, hd)
+        vn = (x @ params["wv"][l]).reshape(b, k, kvh, hd)
+        scales = (dict(k_scale=k_scale[l], v_scale=v_scale[l])
+                  if quantized else {})
+        out = kops.paged_kv_write_chunk(
+            k_pages[l], v_pages[l], kn, vn, page_table, lengths, counts,
+            impl=impl, **scales,
+        )
+        kp, vp = out[0], out[1]
+        ks, vs = (out[2], out[3]) if quantized else (None, None)
+        kps.append(kp)
+        vps.append(vp)
+        kss.append(ks)
+        vss.append(vs)
+        q = (x @ params["wq"][l]).reshape(b, k, h, hd)
+        attn = kops.paged_verify(
+            q, kp, vp, ctx_rows, lengths, counts, k_scale=ks, v_scale=vs,
+            impl=impl,
+        )
+        x = x + attn.astype(x.dtype).reshape(b, k, h * hd) @ params["wo"][l]
+    logits = x @ params["embed"].T                          # (B, K, vocab)
+    return (logits, jnp.stack(kps), jnp.stack(vps),
+            jnp.stack(kss) if quantized else None,
+            jnp.stack(vss) if quantized else None)
+
+
+def _paged_lm_verify_steps(params, feed, dstate, k_pages, v_pages, k_scale,
+                           v_scale, page_table, lengths, active, caps, *,
+                           drafter, n, spec_k, vocab, h, kvh, hd, ctx_pages,
+                           impl):
+    """``n`` fused draft→verify→accept iterations in one ``lax.scan``.
+
+    The speculative hot loop, entirely on device: each iteration drafts
+    ``spec_k - 1`` tokens from the drafter state, scores feed+drafts with
+    :func:`_paged_lm_verify_step`, greedy-accepts the matched prefix plus
+    the model's bonus token (:func:`repro.kernels.ops.speculative_accept`),
+    advances lengths by the emitted count (the KV *rollback*: rejected
+    appends past the first mismatch are simply left behind the new length,
+    masked out of every later attention and overwritten by the next
+    iteration's chunk write), and folds the outcome into the drafter
+    state.  The host sees nothing until the caller syncs the stacked
+    (n, B, K) token / (n, B) count outputs at the launch boundary.
+
+    ``caps`` (B,) is each slot's mapped-token capacity: per iteration the
+    scored count is clamped in-graph to ``min(spec_k, caps - lengths)``
+    so speculation can never write past a slot's mapped pages —
+    capacity-starved slots degrade towards fewer scored tokens (0 = the
+    slot stalls until the scheduler grows it).
+
+    Emitted tokens are the target model's argmax only — bitwise the plain
+    greedy decode sequence regardless of drafts or drafter state (wrong
+    drafts cost acceptance rate, never bits).
+    """
+
+    def body(carry, _):
+        fd, ds, kp, vp, ks, vs, lens = carry
+        drafts = drafter.draft(ds, fd, spec_k - 1)          # (B, K-1)
+        q_tokens = jnp.concatenate(
+            [fd[:, None], drafts.astype(jnp.int32)], axis=1
+        )
+        counts = jnp.where(
+            active, jnp.clip(caps - lens, 0, spec_k), 0
+        ).astype(jnp.int32)
+        logits, kp, vp, ks, vs = _paged_lm_verify_step(
+            params, q_tokens, kp, vp, ks, vs, page_table, lens, counts,
+            h=h, kvh=kvh, hd=hd, ctx_pages=ctx_pages, impl=impl,
+        )
+        g = jnp.argmax(logits[..., :vocab], axis=-1).astype(jnp.int32)
+        n_emit = kops.speculative_accept(drafts, g, counts)
+        fd = jnp.where(
+            n_emit > 0,
+            jnp.take_along_axis(
+                g, jnp.clip(n_emit - 1, 0, spec_k - 1)[:, None], axis=1
+            )[:, 0],
+            fd,
+        )
+        ds = drafter.update(ds, q_tokens, g, n_emit)
+        lens = lens + n_emit.astype(lens.dtype)
+        return (fd, ds, kp, vp, ks, vs, lens), (g, n_emit)
+
+    carry = (feed, dstate, k_pages, v_pages, k_scale, v_scale, lengths)
+    (feed, dstate, k_pages, v_pages, k_scale, v_scale, lengths), \
+        (toks, counts) = jax.lax.scan(body, carry, None, length=n)
+    return (toks, counts, feed, dstate, k_pages, v_pages, k_scale, v_scale,
+            lengths)
+
+
 class PagedLM:
     """Attention-only LM serving straight out of a :class:`PagedKVCache`.
 
@@ -220,16 +335,25 @@ class PagedLM:
     The matching cache must be created with the same ``kv_dtype``.
     """
 
-    #: Max resident jitted prefill programs.  Each distinct ``(page, ctx)``
-    #: bucket mints one program; ragged prompt-length traffic over many page
-    #: sizes would otherwise grow the cache without bound.
+    #: Max resident jitted prefill *and* verify programs (one shared LRU).
+    #: Each distinct ``(page, ctx)`` prefill bucket or
+    #: ``("verify", spec_k, page, ctx)`` verify bucket mints one program;
+    #: ragged prompt-length traffic over many page sizes would otherwise
+    #: grow the cache without bound.
     PREFILL_CACHE_CAP = 8
 
     def __init__(self, cfg: ArchConfig, key: jax.Array, impl: str = "pallas",
                  prefill_cache_cap: Optional[int] = None,
-                 kv_dtype: Optional[str] = None):
+                 kv_dtype: Optional[str] = None, spec_k: int = 1,
+                 drafter: Optional[Drafter] = None):
+        if spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {spec_k}")
         self.cfg = cfg
         self.impl = impl
+        self.spec_k = spec_k
+        self.drafter = drafter if drafter is not None else NGramDrafter(
+            cfg.vocab
+        )
         self.kv_dtype = (
             PagedKVCache.KV_DTYPES[kv_dtype] if kv_dtype is not None
             else cfg.compute_dtype
@@ -280,6 +404,26 @@ class PagedLM:
             _paged_lm_prefill_batch, h=self.h, kvh=self.kvh, hd=self.hd,
             page=page, ctx_pages=ctx_pages, impl=self.impl,
         ), donate_argnums=(5, 6, 7, 8))
+
+    def _verify(self, spec_k: int, ctx_pages: int):
+        return jax.jit(functools.partial(
+            _paged_lm_verify_steps, drafter=self.drafter, spec_k=spec_k,
+            vocab=self.cfg.vocab, h=self.h, kvh=self.kvh, hd=self.hd,
+            ctx_pages=ctx_pages, impl=self.impl,
+        ), static_argnames=("n",), donate_argnums=(3, 4, 5, 6))
+
+    def _cached_program(self, key, make):
+        """Shared LRU over jitted prefill *and* verify programs: refreshed
+        on hit, evicted oldest-first past the cap (an evicted bucket
+        transparently re-jits — correctness never depends on residency)."""
+        fn = self._prefill_cache.get(key)
+        if fn is None:
+            fn = self._prefill_cache[key] = make()
+            while len(self._prefill_cache) > self.prefill_cache_cap:
+                self._prefill_cache.popitem(last=False)
+        else:
+            self._prefill_cache.move_to_end(key)
+        return fn
 
     @property
     def quantized(self) -> bool:
@@ -392,6 +536,79 @@ class PagedLM:
         )
         return out, cache
 
+    # -- speculative verify --------------------------------------------------
+
+    def verify_upto(self, tokens, cache: PagedKVCache, active, n: int,
+                    dstate):
+        """``n`` fused draft→verify→accept iterations as pow2 scan chains.
+
+        tokens (B,) int32 feed tokens; ``dstate`` is the drafter state
+        pytree (see :class:`repro.serve.drafter.Drafter`).  Like
+        :meth:`decode_upto`, power-of-two scan lengths bound the jit cache
+        to O(log n) compilations per ``("verify", spec_k, page, ctx)``
+        bucket while feed/drafter-state/pools/lengths stay on device
+        between chunks; the stacked outputs cross to the host exactly
+        once, here.
+
+        Returns ``(toks (n, B, K) np.ndarray, counts (n, B) np.ndarray,
+        cache, dstate)`` — step ``s`` emitted ``counts[s, b]`` tokens for
+        slot ``b``, namely ``toks[s, b, :counts[s, b]]``.  Unlike plain
+        decode the per-step advance is data-dependent, so the host
+        lengths shadow is reconciled from the synced counts (still one
+        sync per launch).
+        """
+        k = self.spec_k
+        b = cache.page_table.shape[0]
+        page = cache.page_size
+        lens_host = (cache.lengths_host if cache.lengths_host is not None
+                     else np.asarray(cache.lengths))
+        act_host = np.asarray(active).astype(bool)
+        caps = np.array(
+            [cache._mapped(s) * page for s in range(b)], np.int64
+        )
+        # Context bucket: the furthest any slot can reach this launch.
+        hi = np.where(
+            act_host, np.minimum(lens_host + n * k, caps), lens_host
+        )
+        need = int(max(1, -(-int(hi.max()) // page)))
+        ctx = 1
+        while ctx < need:
+            ctx *= 2
+        ctx = min(ctx, cache.pages_per_seq)
+        fn = self._cached_program(
+            ("verify", k, page, ctx), lambda: self._verify(k, ctx)
+        )
+        feed = jnp.asarray(tokens)
+        act_dev = jnp.asarray(act_host)
+        caps_dev = jnp.asarray(caps, jnp.int32)
+        kp, vp = cache.k_pages, cache.v_pages
+        ks, vs = cache.k_scale, cache.v_scale
+        lens = cache.lengths
+        tok_parts, cnt_parts = [], []
+        rem = n
+        with _donation_noop_ok():
+            while rem:
+                m = 1 << (rem.bit_length() - 1)
+                toks, counts, feed, dstate, kp, vp, ks, vs, lens = fn(
+                    self.params, feed, dstate, kp, vp, ks, vs,
+                    cache.page_table, lens, act_dev, caps_dev, n=m,
+                )
+                tok_parts.append(toks)
+                cnt_parts.append(counts)
+                rem -= m
+        toks_h = np.concatenate(
+            [np.asarray(t) for t in tok_parts], axis=0
+        )                                                   # sync
+        counts_h = np.concatenate([np.asarray(c) for c in cnt_parts], axis=0)
+        cache = dataclasses.replace(
+            cache, k_pages=kp, v_pages=vp, k_scale=ks, v_scale=vs,
+            lengths=lens,
+            lengths_host=(lens_host + counts_h.sum(axis=0)).astype(
+                lens_host.dtype
+            ) if cache.lengths_host is not None else None,
+        )
+        return toks_h, counts_h, cache, dstate
+
     # -- prefill -------------------------------------------------------------
 
     def prefill_batch(self, tokens: np.ndarray, counts: np.ndarray,
@@ -413,14 +630,9 @@ class PagedLM:
         while ctx < need:
             ctx *= 2
         ctx = min(ctx, cache.pages_per_seq)
-        key = (page, ctx)
-        fn = self._prefill_cache.get(key)
-        if fn is None:
-            fn = self._prefill_cache[key] = self._prefill(page, ctx)
-            while len(self._prefill_cache) > self.prefill_cache_cap:
-                self._prefill_cache.popitem(last=False)
-        else:
-            self._prefill_cache.move_to_end(key)
+        fn = self._cached_program(
+            (page, ctx), lambda: self._prefill(page, ctx)
+        )
         with _donation_noop_ok():
             logits, kp, vp, ks, vs, new_len = fn(
                 self.params, jnp.asarray(tokens), jnp.asarray(counts),
@@ -482,6 +694,9 @@ class PagedFamily(ServableFamily):
             )
         self.model = model
         self.cache = cache
+        # Drafter state (speculative decoding): lazily initialized at the
+        # first verify launch, then family-resident across launches.
+        self._drafter_state = None
 
     # -- geometry -----------------------------------------------------------
 
@@ -562,6 +777,67 @@ class PagedFamily(ServableFamily):
             tokens, self.cache, active, n
         )
         return out
+
+    # -- speculative verify --------------------------------------------------
+
+    @property
+    def spec_k(self) -> int:
+        return self.model.spec_k
+
+    def verify_steps(self, tokens, active,
+                     n: int) -> Tuple[np.ndarray, np.ndarray]:
+        """``n`` fused draft→verify→accept launches over ``active`` slots.
+
+        Returns ``(toks (n, B, spec_k), counts (n, B))`` host arrays —
+        one sync at the boundary.  Drafter state is family-resident and
+        carried across launches; it only shapes acceptance rate, so
+        evictions/replays never need to snapshot or reset it for
+        bit-exactness (they keep whatever it learned).
+        """
+        if self._drafter_state is None:
+            self._drafter_state = self.model.drafter.init_state(self.batch)
+        toks, counts, self.cache, self._drafter_state = \
+            self.model.verify_upto(
+                tokens, self.cache, active, n, self._drafter_state
+            )
+        return toks, counts
+
+    def verify_account(self, lens0: np.ndarray, active,
+                       counts: np.ndarray) -> List[Tuple[Traffic, tuple]]:
+        """Per-launch-step (Traffic, streams) for a verify run that just
+        completed.  Unlike :meth:`step_streams` this runs *after* the
+        launch: per-step context lengths depend on data-dependent
+        acceptance, so they are reconstructed from the pre-launch length
+        shadow ``lens0`` plus the synced emitted ``counts`` (n, B) — the
+        scored count per step is re-derived with the same
+        ``min(spec_k, caps - len)`` clamp the device loop applied."""
+        k = self.model.spec_k
+        page = self.cache.page_size
+        b = self.batch
+        table = np.array(self._host_table())
+        slots = np.nonzero(np.asarray(active))[0]
+        caps = np.array(
+            [self.cache._mapped(s) * page for s in range(b)], np.int64
+        )
+        lens = np.asarray(lens0, np.int64).copy()
+        accounts: List[Tuple[Traffic, tuple]] = []
+        for s in range(counts.shape[0]):
+            scored = np.zeros((b,), np.int64)
+            scored[slots] = np.clip(caps[slots] - lens[slots], 0, k)
+            traffic = spec_verify_traffic(
+                lens, scored, page, self.cache.pages_per_seq,
+                self.model.kv_token_bytes,
+                elem_bits=self.model.kv_elem_bits,
+                scale_bytes_per_token=self.model.kv_scale_token_bytes,
+            )
+            streams = verify_table_streams(
+                table, lens, scored, page, self.model.kv_token_bytes,
+                kv_elem_bits=self.model.kv_elem_bits,
+                scale_bytes_per_token=self.model.kv_scale_token_bytes,
+            )
+            accounts.append((traffic, streams))
+            lens += np.asarray(counts[s], np.int64)
+        return accounts
 
     # -- traffic accounting -------------------------------------------------
 

@@ -401,7 +401,7 @@ class StepRecord:
     """
 
     step: int
-    kind: str                 # 'decode' | 'prefill' | 'share'
+    kind: str                 # 'decode' | 'verify' | 'prefill' | 'share'
     n_active: int
     new_tokens: int
     traffic: Optional[Traffic]
@@ -422,20 +422,45 @@ class ServeStats:
     n_stragglers: int = 0           # watchdog-flagged slow steps
     n_prefix_drops: int = 0         # fault-injected prefix-index drops
     n_prefix_drop_skips: int = 0    # prefix-drop faults skipped (no index)
+    # Speculative-decoding token accounting (kind='verify' records).  A
+    # verify step *drafts* spec_k - 1 tokens per active slot, *accepts* the
+    # matched prefix of them, and *emits* accepted + 1 bonus tokens into
+    # request outputs (minus any dropped past a request's max_new).  Only
+    # emitted tokens ever enter ``Request.generated`` — so ``replay_cost``
+    # (and thus ``replay_budget`` charging) counts accepted work only,
+    # never the drafts the verifier rejected.
+    n_drafted: int = 0              # draft tokens proposed to the verifier
+    n_accepted: int = 0             # draft tokens the verifier accepted
+    n_emitted: int = 0              # tokens appended to request outputs
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of drafted tokens the verifier accepted."""
+        return self.n_accepted / self.n_drafted if self.n_drafted else 0.0
+
+    #: Decode-side record kinds: plain fused decode and speculative verify
+    #: launches both stream the same per-step KV state, so the serving
+    #: BASE/PACK aggregates fold them together.
+    _DECODE_KINDS = ("decode", "verify")
 
     @property
     def decode_steps(self) -> int:
-        return sum(1 for r in self.records if r.kind == "decode")
+        return sum(1 for r in self.records if r.kind in self._DECODE_KINDS)
+
+    @property
+    def spec_steps(self) -> int:
+        return sum(1 for r in self.records if r.kind == "verify")
 
     @property
     def tokens(self) -> int:
         return sum(r.new_tokens for r in self.records)
 
-    def _sum(self, attr: str, kind: str = "decode") -> int:
+    def _sum(self, attr: str, kind=("decode", "verify")) -> int:
+        kinds = (kind,) if isinstance(kind, str) else kind
         return sum(
             getattr(r.traffic, attr)
             for r in self.records
-            if r.kind == kind and r.traffic is not None
+            if r.kind in kinds and r.traffic is not None
         )
 
     @property
@@ -1018,10 +1043,17 @@ class Scheduler:
         """
         if any(r.state is RequestState.PREFILL for r in self.resident):
             return 1
+        k = self.family.spec_k
         lens = self._lengths()
-        to_done = min(r.max_new - 1 - r.fed for r in running)
+        # With speculation each launch step consumes up to ``k`` feed
+        # tokens and writes up to ``k`` KV entries, so both horizons are
+        # divided by ``k``: ceil for completion (the in-graph capacity
+        # clamp plus the host-side done-drop make a partial final step
+        # safe), floor for growth (a step with under ``k`` tokens of
+        # headroom still progresses — the clamp scores what fits).
+        to_done = min(-(-(r.max_new - 1 - r.fed) // k) for r in running)
         to_growth = min(
-            self.family.token_capacity(r.slot) - int(lens[r.slot])
+            (self.family.token_capacity(r.slot) - int(lens[r.slot])) // k
             for r in running
         )
         return max(1, min(to_done, to_growth))
@@ -1045,17 +1077,21 @@ class Scheduler:
 
         # Fuse up to the boundary: device-resident scan chunks, one token
         # sync at the end (the scheduling boundary).
+        k = self.family.spec_k
         n = self._fused_steps(running)
         if self.prefix_index is not None:
             # Defensive: decode appends land past the prompt, and shared
             # pages only ever cover full prompt pages, so this scan never
             # copies unless an invariant broke (see _prefill_all).
-            lens0 = self._lengths()
+            lens_cow = self._lengths()
             for r in running:
-                ln = int(lens0[r.slot])
+                ln = int(lens_cow[r.slot])
                 self.stats.cow_copies += self.family.ensure_writable(
-                    r.slot, ln, ln + n - 1
+                    r.slot, ln, ln + n * k - 1
                 )
+        if k > 1:
+            self._decode_speculative(running, tokens, active, n)
+            return
         # Per-step accounting snapshots come *before* the launch mutates the
         # family's host shadows — identical records to a step-at-a-time run.
         accounts = self.family.step_streams(active, n)
@@ -1078,6 +1114,51 @@ class Scheduler:
                 new_tokens=new_tokens, traffic=traffic, streams=streams,
             ))
 
+    def _decode_speculative(self, running: List[Request],
+                            tokens: np.ndarray, active: np.ndarray,
+                            n: int) -> None:
+        """Speculative counterpart of the plain fused-decode tail.
+
+        One ``verify_steps`` launch covers ``n`` draft→verify→accept
+        iterations; the emitted tokens per (step, slot) are data-dependent,
+        so traffic accounting runs *after* the launch from the pre-launch
+        length shadow (``verify_account``), and the host consumption loop
+        walks ``counts[s, slot]`` emissions instead of exactly one.  A
+        request that completes mid-launch simply drops the surplus
+        emissions (the device kept verifying its own greedy continuation;
+        the extra KV dies with the slot at retirement).  Replay is the
+        plain-decode story unchanged: emitted tokens are the greedy
+        sequence, so re-fed requests consume recorded tokens until
+        ``fed`` catches up with ``generated``.
+        """
+        k = self.family.spec_k
+        lens0 = np.array(self._lengths(), copy=True)
+        toks, counts = self.family.verify_steps(tokens, active, n)
+        accounts = self.family.verify_account(lens0, active, counts)
+        for s in range(n):
+            traffic, streams = accounts[s]
+            new_tokens = 0
+            for r in running:
+                c = int(counts[s, r.slot])
+                self.stats.n_drafted += k - 1
+                self.stats.n_accepted += max(c - 1, 0)
+                for i in range(c):
+                    if r.done:
+                        break  # surplus emissions past max_new: dropped
+                    r.fed += 1
+                    if r.fed < len(r.generated):
+                        continue  # replay after eviction: output known
+                    tok = int(toks[s, r.slot, i])
+                    r.generated.append(tok)
+                    new_tokens += 1
+                    self.stats.n_emitted += 1
+                    if r.on_token:
+                        r.on_token(r, tok)
+            self.stats.records.append(StepRecord(
+                step=self._step, kind="verify", n_active=len(running),
+                new_tokens=new_tokens, traffic=traffic, streams=streams,
+            ))
+
     def _grow_units(self, running: List[Request]) -> List[Request]:
         """Allocate a unit for every running request whose next token lands
         past its slot's capacity, evicting the cheapest low-priority resident
@@ -1086,51 +1167,70 @@ class Scheduler:
         whose slots never grow (recurrent state) report unbounded capacity,
         so this is pure pass-through for them."""
         lengths = self._lengths()
+        spec_k = self.family.spec_k
         deferred: set = set()
         for r in sorted(running, key=lambda x: x.admit_order):
             if r.state is not RequestState.RUNNING:
                 continue  # evicted below by another request's allocation
-            if int(lengths[r.slot]) < self.family.token_capacity(r.slot):
-                continue  # headroom left in the last mapped unit
-            if self._alloc_denied():
-                # Fault: allocations fail this step.  The request keeps its
-                # slot and units but sits out this step's decode; growth is
-                # retried at the next boundary.  Nothing was mutated, so the
-                # pool stays consistent (the crash-consistency contract).
-                deferred.add(r.rid)
-                continue
+            # Headroom this step needs: one token for plain decode, up to
+            # ``spec_k`` for a speculative family (capped by the tokens the
+            # request can still feed — the last verify step never needs
+            # room past its final emission).  With spec_k == 1 this is
+            # exactly the old ``lengths == capacity`` growth trigger.
+            head = min(spec_k, max(r.max_new - 1 - r.fed, 1))
+            target = int(lengths[r.slot]) + head
             while (r.state is RequestState.RUNNING
-                   and self._effective_free() < 1):
-                # Retained-but-unshared prefix pages are the cheapest relief
-                # (no resident loses work); then evict the lowest-priority
-                # resident with the cheapest replay (youngest on ties).  Each
-                # iteration frees a unit, removes a resident, or empties the
-                # index, so the loop terminates.
-                self._drop_retained(1)
-                if self._effective_free() >= 1:
+                   and self.family.token_capacity(r.slot) < target):
+                if self._alloc_denied():
+                    # Fault: allocations fail this step.  The request keeps
+                    # its slot and units; with zero headroom it sits out
+                    # this step's decode (growth retried next boundary),
+                    # with partial headroom the capacity clamp lets it run
+                    # short.  Nothing was mutated, so the pool stays
+                    # consistent (the crash-consistency contract).
+                    if (self.family.token_capacity(r.slot)
+                            <= int(lengths[r.slot])):
+                        deferred.add(r.rid)
                     break
-                victim = min(
-                    self.resident,
-                    key=lambda x: (x.priority, x.replay_cost, -x.admit_order),
-                )
-                if victim is r and len(self.resident) == 1:
-                    if (self.prefix_index is not None
-                            and self.prefix_index.entries):
-                        # Last resort: drop retention even for pages this
-                        # request shares — it keeps its own mappings.
-                        self.flush_prefix_cache()
-                        continue
-                    # Pool truly (or by injected fault) cannot grow the only
-                    # resident: it defers by self-eviction — requeued for
-                    # replay, or preempted when its budget is spent.  Never
-                    # an exception out of run().
-                    self._evict(r)
+                while (r.state is RequestState.RUNNING
+                       and self._effective_free() < 1):
+                    # Retained-but-unshared prefix pages are the cheapest
+                    # relief (no resident loses work); then evict the
+                    # lowest-priority resident with the cheapest replay
+                    # (youngest on ties).  Each iteration frees a unit,
+                    # removes a resident, or empties the index, so the loop
+                    # terminates.
+                    self._drop_retained(1)
+                    if self._effective_free() >= 1:
+                        break
+                    victim = min(
+                        self.resident,
+                        key=lambda x: (
+                            x.priority, x.replay_cost, -x.admit_order
+                        ),
+                    )
+                    if victim is r and len(self.resident) == 1:
+                        if (self.prefix_index is not None
+                                and self.prefix_index.entries):
+                            # Last resort: drop retention even for pages
+                            # this request shares — it keeps its own
+                            # mappings.
+                            self.flush_prefix_cache()
+                            continue
+                        # Pool truly (or by injected fault) cannot grow the
+                        # only resident: it defers by self-eviction —
+                        # requeued for replay, or preempted when its budget
+                        # is spent.  Never an exception out of run().
+                        self._evict(r)
+                        break
+                    self._evict(victim)  # may be r: it defers, not others
+                if r.state is not RequestState.RUNNING:
                     break
-                self._evict(victim)  # may be r itself: it defers, not others
-            if r.state is RequestState.RUNNING and not self.family.grow(
-                r.slot, 1
-            ):
-                deferred.add(r.rid)
+                if not self.family.grow(r.slot, 1):
+                    if (self.family.token_capacity(r.slot)
+                            <= int(lengths[r.slot])):
+                        deferred.add(r.rid)
+                    break
         still = [
             r for r in running
             if r.state is RequestState.RUNNING and r.rid not in deferred
@@ -1147,10 +1247,17 @@ class Scheduler:
             x.state is RequestState.PREFILL for x in self.resident
         ):
             lens = self._lengths()
+            # Speculative families over-write by up to spec_k - 1 KV
+            # entries past the final emission (the clamp would otherwise
+            # shorten the last verify steps and reintroduce growth
+            # boundaries), so lookahead maps that margin too — capped at
+            # the slot's hard token capacity.
             wants = {
-                r.rid: (self.family.units_for(
+                r.rid: (self.family.units_for(min(
                     int(lens[r.slot]) + (r.max_new - 1 - r.fed)
-                ) - self.family.mapped_units(r.slot))
+                    + (spec_k - 1),
+                    self.family.slot_token_capacity,
+                )) - self.family.mapped_units(r.slot))
                 for r in still
             }
             if sum(max(w, 0) for w in wants.values()) <= self._effective_free():
